@@ -1,0 +1,101 @@
+"""Shared benchmark utilities: train-once-cache for the paper's CNNs, timing
+helpers, CSV emit."""
+from __future__ import annotations
+
+import functools
+import os
+import pickle
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import vision_dataset
+from repro.models.cnn import (LENET5, RESNET20, CNNSpec, apply_cnn, init_cnn,
+                              quantize_cnn)
+
+CACHE = os.path.join(os.path.dirname(__file__), ".cache")
+
+
+def timeit(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6      # us/call
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# trained CNN fixtures (the paper's §V workloads at laptop scale)
+# ---------------------------------------------------------------------------
+
+# dataset difficulty tuned so float accuracy lands ~92% (the ResNet-20/
+# CIFAR-10 regime of the paper's Fig. 6) — low-bit ADC effects are visible
+NOISE = 0.8
+
+
+def _train_cnn(spec: CNNSpec, n_train: int = 4096, steps: int = 400,
+               lr: float = 3e-3, batch: int = 64, seed: int = 0):
+    x, y = vision_dataset(n_train, hw=spec.input_hw, ch=spec.in_ch,
+                          n_classes=spec.n_classes, seed=seed, noise=NOISE)
+    params = init_cnn(jax.random.PRNGKey(seed), spec)
+
+    def loss_fn(p, xb, yb):
+        logits = apply_cnn(p, xb, spec)
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, yb[:, None], -1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    @jax.jit
+    def step(p, opt_m, xb, yb):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        opt_m = jax.tree.map(lambda m, gr: 0.9 * m + gr, opt_m, g)
+        p = jax.tree.map(lambda w, m: w - lr * m, p, opt_m)
+        return p, opt_m, l
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(seed)
+    for i in range(steps):
+        idx = rng.integers(0, n_train, batch)
+        params, m, _ = step(params, m, x[idx], y[idx])
+    return params, (x, y)
+
+
+def accuracy(logit_fn, x, y, batch: int = 256) -> float:
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        logits = logit_fn(x[i:i + batch])
+        hits += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + batch]))
+    return hits / x.shape[0]
+
+
+def trained_cnn(name: str = "lenet5", retrain: bool = False):
+    """Returns (spec, float params, quantized model, (x_test, y_test)).
+    Cached on disk so every figure benchmark shares one trained model."""
+    spec = {"lenet5": LENET5, "resnet20": RESNET20}[name]
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"{name}.pkl")
+    if os.path.exists(path) and not retrain:
+        with open(path, "rb") as f:
+            params, xy = pickle.load(f)
+        params = jax.tree.map(jnp.asarray, params)
+        xy = tuple(jnp.asarray(v) for v in xy)
+    else:
+        steps = 400 if name == "lenet5" else 600
+        params, xy = _train_cnn(spec, steps=steps)
+        with open(path, "wb") as f:
+            pickle.dump((jax.tree.map(np.asarray, params),
+                         tuple(np.asarray(v) for v in xy)), f)
+    x, y = xy
+    # same class templates (seed), disjoint instances (split=1)
+    x_test, y_test = vision_dataset(1024, hw=spec.input_hw, ch=spec.in_ch,
+                                    n_classes=spec.n_classes, seed=0,
+                                    split=1, noise=NOISE)
+    q = quantize_cnn(params, spec, x[:64])
+    return spec, params, q, (x_test, y_test)

@@ -1,0 +1,78 @@
+"""Fig. 6a/6b — prediction accuracy vs ADC bit-width, Uniform vs TRQ.
+
+The paper's claim: TRQ at 4-bit effective resolution reaches the accuracy a
+uniform ADC needs ~7 bits for.  Reproduced on the paper's own workload class
+(LeNet-5; ResNet-20 with --full) over the bit-exact ISAAC datapath, with
+Algorithm-1 calibration and NO retraining."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibrate import calibrate_layer
+from repro.core.trq import make_params
+from repro.models.cnn import apply_cnn, pim_forward
+from repro.core.energy import R_ADC_DEFAULT
+
+from .common import accuracy, emit, trained_cnn
+
+
+def collect_bl(q, x) -> dict:
+    samples: dict[str, list] = {}
+    pim_forward(q, x, tap_bl=lambda n, s: samples.setdefault(n, []).append(
+        np.asarray(s).ravel()))
+    return {k: np.concatenate(v) for k, v in samples.items()}
+
+
+def uniform_params(y: np.ndarray, bits: int):
+    """Best-effort plain uniform ADC at ``bits``: full-range max-abs scale
+    (the paper's non-calibrated U baseline)."""
+    delta = max(float(y.max()), 1.0) / (2 ** bits - 1)
+    return make_params(delta_r1=delta, bias=0.0, n_r1=bits, n_r2=bits, m=0,
+                       mode="uniform")
+
+
+def run(quick: bool = False, model: str = "lenet5") -> dict:
+    spec, params, q, (x_test, y_test) = trained_cnn(model)
+    n_eval = 128 if quick else 512
+    n_cal = 32                                     # paper: 32 calib images
+    x_ev, y_ev = x_test[:n_eval], y_test[:n_eval]
+
+    bl = collect_bl(q, x_test[-n_cal:])
+    apply_f32 = jax.jit(lambda v: apply_cnn(params, v, spec))
+    results = {"float_acc": accuracy(apply_f32, x_ev, y_ev)}
+    emit(f"fig6.{model}.float", 0.0, f"acc={results['float_acc']:.4f}")
+
+    # lossless-ADC PIM reference (the "8/f" row)
+    acc_ref = accuracy(lambda xb: pim_forward(q, xb, None), x_ev, y_ev)
+    results["pim_lossless_acc"] = acc_ref
+    emit(f"fig6.{model}.pim8b", 0.0, f"acc={acc_ref:.4f}")
+
+    bit_range = (8, 7, 6, 5, 4, 3, 2) if not quick else (8, 6, 4, 3)
+    results["uniform"], results["trq"], results["trq_ops"] = {}, {}, {}
+    for bits in bit_range:
+        u = {name: uniform_params(y, bits) for name, y in bl.items()}
+        acc_u = accuracy(lambda xb: pim_forward(q, xb, u), x_ev, y_ev)
+        cal = {name: calibrate_layer(y, n_max=bits) for name, y in bl.items()}
+        t = {name: c.params for name, c in cal.items()}
+        acc_t = accuracy(lambda xb: pim_forward(q, xb, t), x_ev, y_ev)
+        mean_ops = float(np.mean([c.mean_ops for c in cal.values()]))
+        results["uniform"][bits] = acc_u
+        results["trq"][bits] = acc_t
+        results["trq_ops"][bits] = mean_ops
+        emit(f"fig6.{model}.{bits}bit", 0.0,
+             f"acc_uniform={acc_u:.4f};acc_trq={acc_t:.4f};"
+             f"trq_ops/conv={mean_ops:.2f}")
+
+    # headline check: TRQ@4b within 1% of U@7b (paper's comparison)
+    if 4 in results["trq"] and 7 in results["uniform"]:
+        gap = results["uniform"][7] - results["trq"][4]
+        emit(f"fig6.{model}.headline", 0.0,
+             f"U@7b-TRQ@4b acc gap={gap:+.4f} (paper: ~0)")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    run(model=sys.argv[1] if len(sys.argv) > 1 else "lenet5")

@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle.
+
+On this CPU container interpret-mode timings measure Python emulation, NOT
+TPU performance — the numbers exist to (a) prove the kernels run, and
+(b) regression-track the oracle path.  TPU-side projections come from the
+roofline analysis (see EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.trq import make_params, trq_quant
+from repro.kernels import (trq_group_mvm_pallas, trq_quant_pallas,
+                           xbar_mvm_pallas)
+from repro.pim.crossbar import bit_exact_mvm, fake_quant_mvm
+
+from .common import emit, timeit
+
+
+def run(quick: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    p = make_params(delta_r1=1.0, n_r1=4, n_r2=4, m=3, signed=True)
+
+    x = jnp.asarray(rng.normal(0, 30, (256, 256)).astype(np.float32))
+    us = timeit(lambda v: trq_quant_pallas(v, p, interpret=True), x,
+                iters=3 if quick else 5)
+    us_ref = timeit(lambda v: trq_quant(v, p), x, iters=3 if quick else 5)
+    emit("kernel.trq_quant.pallas_interp", us, "shape=256x256")
+    emit("kernel.trq_quant.jnp_oracle", us_ref, "shape=256x256")
+
+    a = jnp.asarray(rng.normal(0, 1, (128, 512)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (512, 128)).astype(np.float32))
+    us = timeit(lambda aa, ww: trq_group_mvm_pallas(aa, ww, p, 0.05, 1.0,
+                                                    interpret=True),
+                a, w, iters=2 if quick else 4)
+    us_ref = timeit(lambda aa, ww: fake_quant_mvm(aa, ww, p, 0.05, 1.0),
+                    a, w, iters=2 if quick else 4)
+    emit("kernel.trq_group_mvm.pallas_interp", us, "m128.k512.n128")
+    emit("kernel.trq_group_mvm.jnp_oracle", us_ref, "m128.k512.n128")
+
+    ai = jnp.asarray(rng.integers(0, 256, (16, 128)).astype(np.int32))
+    wi = jnp.asarray(rng.integers(-128, 128, (128, 16)).astype(np.int32))
+    us = timeit(lambda aa, ww: xbar_mvm_pallas(aa, ww, p, interpret=True)[0],
+                ai, wi, iters=2 if quick else 3)
+    us_ref = timeit(lambda aa, ww: bit_exact_mvm(aa, ww, p), ai, wi,
+                    iters=2 if quick else 3)
+    emit("kernel.xbar_mvm.pallas_interp", us, "m16.k128.n16.8x8planes")
+    emit("kernel.xbar_mvm.jnp_oracle", us_ref, "m16.k128.n16.8x8planes")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Aggregate dry-run JSON records into the §Roofline table (stdout CSV +
+markdown at experiments/roofline.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COLS = ("arch", "shape", "chips", "model_tflops", "hlo_tflops",
+        "hlo_gbytes", "coll_gbytes", "compute_ms", "memory_ms",
+        "collective_ms", "bottleneck", "useful_flop_frac", "roofline_frac",
+        "bytes_per_dev_gb")
+
+
+def load(dirpath: str) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("status") == "ok" and "roofline" in rec:
+            rows.append(rec["roofline"])
+    return rows
+
+
+def run(quick: bool = False, dirpath: str = "experiments/baseline",
+        out_md: str = "experiments/roofline.md") -> list[dict]:
+    rows = load(dirpath)
+    if not rows:
+        print(f"roofline.report,0.0,no records in {dirpath} (run "
+              "python -m repro.launch.dryrun --all --single-pod-only "
+              f"--out {dirpath})")
+        return rows
+    print("arch,shape,bottleneck,compute_ms,memory_ms,collective_ms,"
+          "useful_flop_frac,roofline_frac,bytes_per_dev_gb")
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['bottleneck']},"
+              f"{r['compute_ms']:.1f},{r['memory_ms']:.1f},"
+              f"{r['collective_ms']:.1f},{r['useful_flop_frac']:.3f},"
+              f"{r['roofline_frac']:.3f},{r['bytes_per_dev_gb']:.2f}")
+    if out_md:
+        os.makedirs(os.path.dirname(out_md), exist_ok=True)
+        with open(out_md, "w") as f:
+            f.write("| " + " | ".join(COLS) + " |\n")
+            f.write("|" + "---|" * len(COLS) + "\n")
+            for r in rows:
+                f.write("| " + " | ".join(
+                    f"{r[c]:.3f}" if isinstance(r[c], float) else str(r[c])
+                    for c in COLS) + " |\n")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark harness — one entry per paper table/figure (deliverable (d)).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6,...]
+
+Emits ``name,us_per_call,derived`` CSV lines.  Paper-claim validations
+(Fig. 3a, 6a/6b, 6c, 7) run the bit-exact ISAAC datapath; TPU-side numbers
+live in the roofline report (fed by launch/dryrun.py records)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller eval sets / fewer bit settings")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig6,fig6c,kernels,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (fig3_distribution, fig6_accuracy, fig6c_fig7_energy,
+                   kernels_micro, roofline_report)
+    suites = {
+        "fig3": lambda: fig3_distribution.run(args.quick),
+        "fig6": lambda: fig6_accuracy.run(args.quick),
+        "fig6c": lambda: fig6c_fig7_energy.run(args.quick),
+        "kernels": lambda: kernels_micro.run(args.quick),
+        "roofline": lambda: roofline_report.run(args.quick),
+    }
+    failed = 0
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"suite.{name},{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception as e:
+            failed += 1
+            traceback.print_exc()
+            print(f"suite.{name},{(time.time() - t0) * 1e6:.0f},"
+                  f"FAIL:{type(e).__name__}:{e}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

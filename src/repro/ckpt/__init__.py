@@ -1,0 +1,1 @@
+from .checkpoint import save, save_async, restore, latest_step, wait_pending

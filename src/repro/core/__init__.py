@@ -1,0 +1,24 @@
+"""repro.core — the paper's primary contribution.
+
+Twin-Range Quantization for SAR-ADC A/D conversion in ReRAM PIM accelerators:
+the quantizer itself (trq), the cycle-accurate/closed-form ADC behavioral
+models (sar_adc), the codebook-free output coding (coding), the A/D-operation
+energy model (energy), BL distribution analysis (distribution) and the
+Algorithm-1 co-optimization search (calibrate).
+"""
+from .trq import (TRQParams, make_params, uniform_quant, uniform_code,
+                  trq_quant, trq_quant_ste, trq_quant_with_ops, trq_ad_ops,
+                  quant_mse, ideal_params, in_r1)
+from .sar_adc import (sar_search_uniform, sar_search_trq,
+                      sar_convert_uniform, sar_convert_trq)
+from .coding import encode, decode, decode_index, shift_add, code_bits
+from .energy import (E_OP_PJ, R_ADC_DEFAULT, XBAR, conversions_per_mvm,
+                     ideal_resolution, adc_energy_pj, mean_ops_trq,
+                     mean_ops_uniform, trq_op_ratio, layer_report,
+                     model_adc_ratio, system_power_breakdown,
+                     LayerEnergyReport)
+from .distribution import classify, histogram_summary, DistributionInfo
+from .calibrate import (calibrate_layer, calibrate_model, summarize,
+                        LayerCalibration)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

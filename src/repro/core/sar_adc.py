@@ -1,0 +1,80 @@
+"""Behavioral model of the (modified) SAR ADC — paper §II-D and §III-D.
+
+Two levels of fidelity:
+
+* ``sar_search_*`` — cycle-accurate successive-approximation search
+  (``lax.fori_loop`` over comparator cycles, exactly the Eq. 5 trajectory).
+  Used in tests to *prove* the closed forms below match the hardware search.
+* ``sar_convert_*`` — closed-form vectorized equivalents (what the rest of
+  the framework and the Pallas kernels use).
+
+Both return ``(code, n_ops)`` where ``n_ops`` is the number of A/D operations
+(comparator cycles), the paper's energy unit (Eq. 6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .trq import TRQParams, in_r1, trq_ad_ops, uniform_code
+
+
+# ---------------------------------------------------------------------------
+# Cycle-accurate search (Eq. 5)
+# ---------------------------------------------------------------------------
+
+def sar_search_uniform(v: jax.Array, k: int, lsb) -> tuple[jax.Array, jax.Array]:
+    """K-cycle binary search on the uniform grid with thresholds
+    ``(idx - 1/2) * lsb`` (paper Fig. 2a).  Returns (code, n_ops=K)."""
+    v = jnp.asarray(v, jnp.float32)
+
+    def step(i, code):
+        bit = k - 1 - i
+        trial = code | (1 << bit)                       # try this bit at 1
+        th = (trial.astype(jnp.float32) - 0.5) * lsb    # threshold voltage
+        keep = (v >= th).astype(jnp.int32)
+        return code | (keep << bit)
+
+    code = jax.lax.fori_loop(0, k, step, jnp.zeros(v.shape, jnp.int32))
+    # SAR physically saturates at the top code; emulate the clamp-at-0 of
+    # Eq. 1 as well (negative inputs resolve to code 0 by construction).
+    return code, jnp.full(v.shape, k, jnp.int32)
+
+
+def sar_search_trq(v: jax.Array, p: TRQParams) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Cycle-accurate twin-range search (paper Fig. 4a).
+
+    Phase 0 (detect, ``nu`` cycles): compare against R1 edges.
+    Phase 1: binary search with step ``delta_r1`` inside R1 ("early bird") or
+    with step ``delta_r2`` over the full range, truncated at ``n_r2`` cycles
+    ("early stopping").
+
+    Returns (msb, payload_code, n_ops).
+    """
+    v = jnp.asarray(v, jnp.float32)
+    hit = in_r1(v, p)
+    fine_code, _ = sar_search_uniform(v - p.offset, p.n_r1, p.delta_r1)
+    coarse_code, _ = sar_search_uniform(v, p.n_r2, p.delta_r2)
+    payload = jnp.where(hit, fine_code, coarse_code)
+    msb = (~hit).astype(jnp.int32)
+    n_ops = trq_ad_ops(v, p)
+    return msb, payload, n_ops
+
+
+# ---------------------------------------------------------------------------
+# Closed-form converters
+# ---------------------------------------------------------------------------
+
+def sar_convert_uniform(v: jax.Array, k: int, lsb) -> tuple[jax.Array, jax.Array]:
+    """Closed form of ``sar_search_uniform``: code = clamp(round(v/lsb))."""
+    return uniform_code(v, lsb, k), jnp.full(jnp.shape(v), k, jnp.int32)
+
+
+def sar_convert_trq(v: jax.Array, p: TRQParams):
+    """Closed form of ``sar_search_trq`` (same return signature)."""
+    hit = in_r1(v, p)
+    fine = uniform_code(v - p.offset, p.delta_r1, p.n_r1)
+    coarse = uniform_code(v, p.delta_r2, p.n_r2)
+    payload = jnp.where(hit, fine, coarse)
+    msb = (~hit).astype(jnp.int32)
+    return msb, payload, trq_ad_ops(v, p)

@@ -1,0 +1,183 @@
+"""Twin-Range Quantization (TRQ) — the paper's Eq. 1 / Eq. 7 / Eq. 8.
+
+The quantizer is the *behavioral abstraction of the A/D conversion of the
+SAR-ADC at the crossbar bit-lines* (paper §III-B).  Everything here is pure
+jnp, jit/vmap/pjit-friendly, and differentiable through an optional STE.
+
+Conventions
+-----------
+* ``delta_r1`` is the fine step (= V_grid in the ideal case); ``delta_r2 =
+  2**m * delta_r1`` (Eq. 8) so both grids align with the full-precision SAR
+  grid.
+* R1 = ``[offset, offset + 2**n_r1 * delta_r1)`` with ``offset =
+  bias * 2**n_r1 * delta_r1``.  The paper specifies that the ``bias`` field is
+  "concatenated to the left side of the coding from R1 in the decoding
+  progress" — i.e. decoded R1 value ``= ((bias << n_r1) | code) * delta_r1``,
+  which pins ``offset`` to ``bias * 2**n_r1 * delta_r1`` for a shift-only
+  (codebook-free) decode.
+* R2 covers the full input span on the coarse grid (Fig. 3b: the orange grid
+  spans the whole axis).  A value outside R1 is quantized as
+  ``Q_{n_r2}(x, delta_r2)``.
+* ``n_r1``/``n_r2``/``m`` are *static* (they select hardware search depth);
+  ``delta_r1``/``bias`` may be traced arrays (per-layer calibrated values).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TRQParams:
+    """Configuration registers of the modified SAR ADC (paper §III-D-2c).
+
+    Mirrors the per-layer configurable register file: output bit-widths
+    (n_r1, n_r2), step size delta_r1 (delta_r2 derived via m), non-uniform
+    degree m, and the R1 offset ``bias``.
+    """
+
+    # --- traced leaves (calibrated per layer) ---
+    delta_r1: jax.Array         # fine step, scalar f32
+    bias: jax.Array             # integer in [0, 2**m - 1], stored as f32/int32
+    # --- static metadata (hardware search depth / control mode) ---
+    n_r1: int = dataclasses.field(metadata=dict(static=True), default=4)
+    n_r2: int = dataclasses.field(metadata=dict(static=True), default=4)
+    m: int = dataclasses.field(metadata=dict(static=True), default=3)
+    nu: int = dataclasses.field(metadata=dict(static=True), default=1)
+    # 'twin' = TRQ mode, 'uniform' = fall back to a plain N_R2-bit uniform ADC
+    mode: str = dataclasses.field(metadata=dict(static=True), default="twin")
+    # signed extension (beyond paper): quantize sign(x) * T(|x|).  The paper's
+    # BL outputs are unsigned (offset-encoded weights); the signed variant is
+    # used by the fast per-group LM path.
+    signed: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+    @property
+    def delta_r2(self) -> jax.Array:
+        return self.delta_r1 * (2.0 ** self.m)
+
+    @property
+    def theta(self) -> jax.Array:
+        """Upper edge of R1 (range-detect threshold)."""
+        return self.offset + (2.0 ** self.n_r1) * self.delta_r1
+
+    @property
+    def offset(self) -> jax.Array:
+        return self.bias * (2.0 ** self.n_r1) * self.delta_r1
+
+    def replace(self, **kw) -> "TRQParams":
+        return dataclasses.replace(self, **kw)
+
+
+def make_params(delta_r1: float = 1.0, bias: float = 0.0, **kw) -> TRQParams:
+    return TRQParams(
+        delta_r1=jnp.asarray(delta_r1, jnp.float32),
+        bias=jnp.asarray(bias, jnp.float32),
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 — uniform quantization
+# ---------------------------------------------------------------------------
+
+def uniform_quant(x: jax.Array, delta, k: int) -> jax.Array:
+    """``Q_k(x, delta)`` of Eq. 1: round to the k-bit uniform grid."""
+    code = uniform_code(x, delta, k)
+    return code.astype(jnp.float32) * delta
+
+
+def uniform_code(x: jax.Array, delta, k: int) -> jax.Array:
+    levels = 2 ** k - 1
+    # floor(x + 0.5), *not* jnp.round: SAR comparison against (idx - 1/2)*LSB
+    # rounds half away from zero, while jnp.round is half-to-even.
+    c = jnp.floor(x / delta + 0.5)
+    return jnp.clip(c, 0, levels).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 7 — twin-range quantization
+# ---------------------------------------------------------------------------
+
+def in_r1(x: jax.Array, p: TRQParams) -> jax.Array:
+    """Range-detect phase of the modified SAR logic (1 extra comparison)."""
+    return (x >= p.offset) & (x < p.theta)
+
+
+def trq_quant(x: jax.Array, p: TRQParams) -> jax.Array:
+    """``T_k`` of Eq. 7 (+ offset handling of §IV-B).
+
+    R1 hit  -> offset + Q_{n_r1}(x - offset, delta_r1)   ("early bird")
+    R1 miss -> Q_{n_r2}(x, delta_r2)                     ("early stopping")
+    """
+    if p.mode == "uniform":
+        return _maybe_signed(x, p, lambda a: uniform_quant(a, p.delta_r2, p.n_r2))
+    return _maybe_signed(x, p, lambda a: _trq_unsigned(a, p))
+
+
+def _trq_unsigned(x: jax.Array, p: TRQParams) -> jax.Array:
+    fine = p.offset + uniform_quant(x - p.offset, p.delta_r1, p.n_r1)
+    coarse = uniform_quant(x, p.delta_r2, p.n_r2)
+    return jnp.where(in_r1(x, p), fine, coarse)
+
+
+def _maybe_signed(x, p: TRQParams, fn):
+    if not p.signed:
+        return fn(x)
+    return jnp.sign(x) * fn(jnp.abs(x))
+
+
+def trq_quant_ste(x: jax.Array, p: TRQParams) -> jax.Array:
+    """Straight-through estimator: forward = trq_quant, backward = identity.
+
+    Lets the fake-quant path sit inside a training graph (QAT-style) even
+    though the paper only needs PTQ."""
+    return x + jax.lax.stop_gradient(trq_quant(x, p) - x)
+
+
+# ---------------------------------------------------------------------------
+# A/D operation counting (paper Eq. 6 / Eq. 9)
+# ---------------------------------------------------------------------------
+
+def trq_ad_ops(x: jax.Array, p: TRQParams) -> jax.Array:
+    """Number of A/D operations (SAR comparator cycles) for each conversion.
+
+    twin mode:    nu (range detect)  +  n_r1 if in R1 else n_r2
+    uniform mode: n_r2 comparisons, no detect phase.
+    """
+    xa = jnp.abs(x) if p.signed else x
+    if p.mode == "uniform":
+        return jnp.full(xa.shape, p.n_r2, jnp.int32)
+    ops = jnp.where(in_r1(xa, p), p.n_r1, p.n_r2) + p.nu
+    return ops.astype(jnp.int32)
+
+
+def trq_quant_with_ops(x: jax.Array, p: TRQParams):
+    """Fused quantize + op-count (what the Pallas kernel implements)."""
+    return trq_quant(x, p), trq_ad_ops(x, p)
+
+
+# ---------------------------------------------------------------------------
+# Quantization error (Eq. 10 objective)
+# ---------------------------------------------------------------------------
+
+def quant_mse(x: jax.Array, p: TRQParams) -> jax.Array:
+    q = trq_quant(x, p)
+    return jnp.mean(jnp.square(q - x))
+
+
+# ---------------------------------------------------------------------------
+# Ideal-case parameter deduction (Eq. 11)
+# ---------------------------------------------------------------------------
+
+def ideal_params(r_ideal: int, n_r1: int, n_r2: int) -> TRQParams:
+    """Eq. 11: delta_r1 = 1 (lossless in R1), n_r2 + m = r_ideal, bias = 0.
+
+    ``r_ideal = ceil(log2(y_max - y_min + 1))`` — the lossless resolution of
+    the BL output (integer-valued partial sums)."""
+    m = max(r_ideal - n_r2, 0)
+    return make_params(delta_r1=1.0, bias=0.0, n_r1=n_r1, n_r2=n_r2, m=m)

@@ -1,0 +1,1 @@
+from .synthetic import TokenStream, lm_batch, vision_dataset

@@ -1,0 +1,85 @@
+"""Deterministic, shard-aware synthetic data pipelines.
+
+Everything is *stateless*: batch ``i`` is a pure function of (seed, i), so a
+restarted/rescaled job regenerates the identical stream from the checkpoint
+step — no data-loader state to snapshot (DESIGN.md §6 fault tolerance).
+
+The LM stream is a mixture of Zipf-distributed unigrams and deterministic
+bigram chains, so a model can actually reduce loss (examples/train_lm.py
+uses the loss curve as its end-to-end check).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+    bigram_frac: float = 0.7     # fraction of next-tokens from the bigram map
+
+    def _bigram_map(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + 7)
+        return rng.integers(0, self.vocab_size, self.vocab_size)
+
+    def batch_at(self, step: int) -> dict:
+        """Batch for global step ``step`` (same on every host; shard by
+        slicing the leading dim per data-parallel rank if needed)."""
+        key = jax.random.PRNGKey(self.seed)
+        key = jax.random.fold_in(key, step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        # zipf-ish unigram draw via exponential rank transform
+        u = jax.random.uniform(k1, (self.batch, self.seq_len + 1),
+                               minval=1e-6, maxval=1.0)
+        ranks = jnp.floor(jnp.exp(jnp.log(self.vocab_size) * u)) - 1
+        toks = ranks.astype(jnp.int32) % self.vocab_size
+        # overwrite a fraction with deterministic bigram transitions
+        bmap = jnp.asarray(self._bigram_map(), jnp.int32)
+        use_bigram = jax.random.uniform(k2, toks.shape) < self.bigram_frac
+
+        def step_fn(prev, inputs):
+            tok_rand, use_b = inputs
+            tok = jnp.where(use_b, bmap[prev], tok_rand)
+            return tok, tok
+
+        _, seq = jax.lax.scan(step_fn, toks[:, 0],
+                              (toks[:, 1:].T, use_bigram[:, 1:].T))
+        seq = jnp.concatenate([toks[:, :1], seq.T], axis=1)
+        return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+
+def lm_batch(vocab: int, seq: int, batch: int, step: int = 0, seed: int = 0):
+    return TokenStream(vocab, seq, batch, seed).batch_at(step)
+
+
+def vision_dataset(n: int, hw: int = 28, ch: int = 1, n_classes: int = 10,
+                   seed: int = 0, noise: float = 0.35, split: int = 0):
+    """Synthetic image classification: fixed random class templates + noise.
+    Learnable by LeNet-class models in a few hundred steps; used for the
+    paper's Fig. 6 accuracy-vs-ADC-bits reproduction.
+
+    ``seed`` fixes the class templates (the task); ``split`` draws disjoint
+    instance noise — use split=0 for train, split=1 for test."""
+    rng = np.random.default_rng(seed)
+    templates = rng.normal(0, 1, (n_classes, hw, hw, ch)).astype(np.float32)
+    rng = np.random.default_rng((seed + 1) * 7919 + split)
+    # low-pass the templates so conv nets have local structure to exploit
+    for _ in range(2):
+        templates = (templates
+                     + np.roll(templates, 1, 1) + np.roll(templates, -1, 1)
+                     + np.roll(templates, 1, 2) + np.roll(templates, -1, 2)) / 5
+    labels = rng.integers(0, n_classes, n)
+    imgs = templates[labels] + noise * rng.normal(0, 1, (n, hw, hw, ch)
+                                                  ).astype(np.float32)
+    # shift-augment for variety
+    shifts = rng.integers(-2, 3, (n, 2))
+    for i in range(n):
+        imgs[i] = np.roll(imgs[i], tuple(shifts[i]), (0, 1))
+    return jnp.asarray(imgs), jnp.asarray(labels, jnp.int32)

@@ -1,0 +1,24 @@
+"""repro.kernels — Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper optimizes the A/D conversion of crossbar partial sums; on TPU the
+corresponding hot-spots are:
+
+``trq_quant``     fused TRQ fake-quant + A/D-operation count (elementwise,
+                  VPU) — the SAR-ADC behavioral quantizer on a VMEM tile.
+``xbar_mvm``      the full ISAAC sliced datapath: in-register bit-plane
+                  extraction, 0/1 matmuls on the MXU per (input-slice,
+                  weight-column, 128-row group), per-BL TRQ, and the
+                  shift-and-add merge — partial sums never leave VMEM.
+``trq_group_mvm`` the deployable LM-scale path: K-blocked matmul with the
+                  per-128-row-group signed TRQ applied to each partial-sum
+                  tile before accumulation (paper §III-B abstraction).
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle).  Kernels TARGET TPU; on this CPU
+container they are validated with interpret=True.
+"""
+from .trq_quant.ops import trq_quant_pallas
+from .xbar_mvm.ops import xbar_mvm_pallas
+from .trq_group_mvm.ops import trq_group_mvm_pallas
+
+__all__ = ["trq_quant_pallas", "xbar_mvm_pallas", "trq_group_mvm_pallas"]

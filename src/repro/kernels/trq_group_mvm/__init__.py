@@ -1,0 +1,1 @@
+from .ops import trq_group_mvm_pallas

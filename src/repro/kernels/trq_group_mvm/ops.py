@@ -1,0 +1,33 @@
+"""jit'd public wrapper for trq_group_mvm (pads M/N/K, restores shape)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trq import TRQParams
+from .kernel import XBAR, trq_group_mvm_tiles
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def trq_group_mvm_pallas(a: jax.Array, w: jax.Array, p: TRQParams,
+                         a_scale=1.0, w_scale=1.0, *, block_m: int = 128,
+                         block_n: int = 128, interpret: bool = True):
+    """Per-128-row-group signed-TRQ matmul: a (..., K) @ w (K, N)."""
+    lead = a.shape[:-1]
+    k_ = a.shape[-1]
+    n_ = w.shape[1]
+    a2 = a.reshape(-1, k_).astype(jnp.float32)
+    m_ = a2.shape[0]
+
+    pad_m = (-m_) % block_m
+    pad_n = (-n_) % block_n
+    pad_k = (-k_) % XBAR
+    a_p = jnp.pad(a2, ((0, pad_m), (0, pad_k)))
+    w_p = jnp.pad(w.astype(jnp.float32), ((0, pad_k), (0, pad_n)))
+
+    grid_scale = jnp.asarray(a_scale, jnp.float32) * jnp.asarray(w_scale, jnp.float32)
+    out = trq_group_mvm_tiles(a_p, w_p, p, grid_scale, block_m=block_m,
+                              block_n=block_n, interpret=interpret)
+    return out[:m_, :n_].reshape(*lead, n_)

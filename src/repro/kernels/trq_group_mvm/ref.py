@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: repro.pim.crossbar.fake_quant_mvm (independent einsum
+formulation of the per-group TRQ matmul)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.trq import TRQParams
+from repro.pim.crossbar import fake_quant_mvm
+
+
+def trq_group_mvm_ref(a: jax.Array, w: jax.Array, p: TRQParams, a_scale,
+                      w_scale):
+    return fake_quant_mvm(a, w, p, a_scale, w_scale)

@@ -1,0 +1,1 @@
+from .ops import trq_quant_pallas

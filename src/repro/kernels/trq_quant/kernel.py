@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused TRQ fake-quant + A/D-operation count.
+
+Elementwise (VPU) kernel over VMEM tiles.  The SAR configuration registers
+(delta_r1, bias) arrive as scalars in SMEM — exactly the "configurable
+register near the ADC" of paper §III-D-2c; the search depths (n_r1, n_r2, m,
+nu, mode, signed) are compile-time constants, as they select control-logic
+paths in the hardware.
+
+TPU mapping notes
+-----------------
+* block shape (block_m, block_n) with block_n a multiple of 128 (lane dim)
+  and block_m a multiple of 8 (sublane dim for f32).
+* one load of x per tile; both outputs written from registers -> arithmetic
+  intensity is maximal for an elementwise op (reads 4B, writes 8B per elem).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.trq import TRQParams, trq_quant, trq_ad_ops
+
+
+def _kernel(scalars_ref, x_ref, q_ref, ops_ref, *, n_r1, n_r2, m, nu, mode,
+            signed):
+    # reconstruct the register file from SMEM scalars; core.trq is the single
+    # source of truth for the quantizer math (ref.py uses the same functions
+    # on the whole array).
+    p = TRQParams(delta_r1=scalars_ref[0], bias=scalars_ref[1],
+                  n_r1=n_r1, n_r2=n_r2, m=m, nu=nu, mode=mode, signed=signed)
+    x = x_ref[...]
+    q_ref[...] = trq_quant(x, p)
+    ops_ref[...] = trq_ad_ops(x, p)
+
+
+def trq_quant_tiles(x: jax.Array, p: TRQParams, *, block_m: int = 256,
+                    block_n: int = 256, interpret: bool = True):
+    """x: (M, N) f32, M % block_m == N % block_n == 0.  Returns (q, ops)."""
+    m_tiles = x.shape[0] // block_m
+    n_tiles = x.shape[1] // block_n
+    scalars = jnp.stack([jnp.asarray(p.delta_r1, jnp.float32),
+                         jnp.asarray(p.bias, jnp.float32)])
+    kernel = functools.partial(_kernel, n_r1=p.n_r1, n_r2=p.n_r2, m=p.m,
+                               nu=p.nu, mode=p.mode, signed=p.signed)
+    return pl.pallas_call(
+        kernel,
+        grid=(m_tiles, n_tiles),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # register file
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, jnp.float32),
+            jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        ],
+        interpret=interpret,
+    )(scalars, x)

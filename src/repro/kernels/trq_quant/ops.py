@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the trq_quant kernel: shape-agnostic (pads to
+tile multiples, restores), dtype-normalizing."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trq import TRQParams
+from .kernel import trq_quant_tiles
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def trq_quant_pallas(x: jax.Array, p: TRQParams, *, block_m: int = 256,
+                     block_n: int = 256, interpret: bool = True):
+    """TRQ fake-quant + A/D op count for arbitrary-shaped ``x``.
+
+    Returns (q, ops) with q.shape == ops.shape == x.shape."""
+    orig_shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    # lay out as (rows, block_n) and pad rows to block_m
+    cols = block_n
+    rows = -(-n // cols)
+    pad_flat = rows * cols - n
+    flat = jnp.pad(flat, (0, pad_flat))
+    rows_pad = (-rows) % block_m
+    x2 = jnp.pad(flat.reshape(rows, cols), ((0, rows_pad), (0, 0)))
+    q2, ops2 = trq_quant_tiles(x2, p, block_m=block_m, block_n=block_n,
+                               interpret=interpret)
+    q = q2.reshape(-1)[:n].reshape(orig_shape)
+    ops = ops2.reshape(-1)[:n].reshape(orig_shape)
+    return q, ops

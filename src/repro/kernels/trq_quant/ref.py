@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the trq_quant kernel: literally core.trq on the full
+array (the kernel reuses those functions per tile, so any mismatch indicates
+a tiling/padding bug, not a math bug)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trq import TRQParams, trq_quant, trq_ad_ops
+
+
+def trq_quant_ref(x: jax.Array, p: TRQParams):
+    return trq_quant(x.astype(jnp.float32), p), trq_ad_ops(x, p)

@@ -1,0 +1,1 @@
+from .ops import xbar_mvm_pallas

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: the full ISAAC sliced crossbar datapath, fused.
+
+One grid step processes one (row-tile i, col-tile j, 128-row group k) cell:
+
+  1. load the int8-valued input tile (block_m, 128) and the offset-encoded
+     weight tile (128, block_n) into VMEM **once**;
+  2. extract the k_i x k_w bit-planes *in registers* ((x >> b) & 1 on the
+     VPU) — bit-planes never exist in HBM;
+  3. for each (input-slice b, weight-column c) pair: a 0/1 matmul on the
+     MXU (f32 accumulation is exact: BL sums <= 128 < 2**24);
+  4. TRQ-quantize the partial-sum tile — the SAR-ADC behavioral model — and
+     count A/D operations;
+  5. shift-and-add (* 2**(b+c)) into the VMEM accumulator; the k grid axis
+     revisits the output block, so cross-group accumulation also stays in
+     VMEM.
+
+The offset-encoding correction term (zp * rowsum(a)) is exact digital math
+and is applied by ops.py outside the kernel.
+
+TPU adaptation of the paper (DESIGN.md §2): the crossbar's 128 rows map to
+one MXU K-block; "ADC samples a BL" becomes "VPU quantizes the partial-sum
+tile before it is merged", which is precisely where ISAAC's ADC sits in the
+dataflow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.trq import TRQParams, trq_quant, trq_ad_ops
+
+XBAR = 128
+
+
+def _kernel(scalars_ref, a_ref, w_ref, out_ref, ops_ref, *,
+            k_i, k_w, n_r1, n_r2, m, nu, mode, lossless, r_adc):
+    p = TRQParams(delta_r1=scalars_ref[0], bias=scalars_ref[1],
+                  n_r1=n_r1, n_r2=n_r2, m=m, nu=nu, mode=mode, signed=False)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        ops_ref[...] = jnp.zeros_like(ops_ref)
+
+    a = a_ref[...].astype(jnp.int32)          # (bm, 128) unsigned values
+    w = w_ref[...].astype(jnp.int32)          # (128, bn) offset-encoded
+
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    ops = jnp.zeros(out_ref.shape, jnp.float32)
+    for b in range(k_i):                      # static -> fully unrolled
+        a_plane = ((a >> b) & 1).astype(jnp.float32)
+        for c in range(k_w):
+            w_plane = ((w >> c) & 1).astype(jnp.float32)
+            psum = jax.lax.dot(a_plane, w_plane,
+                               precision=jax.lax.Precision.HIGHEST)
+            if lossless:
+                q = psum
+                ops = ops + jnp.float32(r_adc)
+            else:
+                q = trq_quant(psum, p)
+                ops = ops + trq_ad_ops(psum, p).astype(jnp.float32)
+            acc = acc + q * jnp.float32(2 ** (b + c))
+    out_ref[...] += acc
+    ops_ref[...] += ops
+
+
+def xbar_mvm_tiles(a: jax.Array, w_enc: jax.Array, p: TRQParams | None, *,
+                   k_i: int = 8, k_w: int = 8, r_adc: int = 8,
+                   block_m: int = 128, block_n: int = 128,
+                   interpret: bool = True):
+    """a: (M, 128*G) int32 unsigned; w_enc: (128*G, N) int32 offset-encoded.
+    M % block_m == N % block_n == 0.  Returns (acc, ops) both (M, N)."""
+    mm, kk = a.shape
+    nn = w_enc.shape[1]
+    grid = (mm // block_m, nn // block_n, kk // XBAR)
+    lossless = p is None
+    if lossless:
+        p = TRQParams(delta_r1=jnp.float32(1), bias=jnp.float32(0))
+    scalars = jnp.stack([jnp.asarray(p.delta_r1, jnp.float32),
+                         jnp.asarray(p.bias, jnp.float32)])
+    kernel = functools.partial(
+        _kernel, k_i=k_i, k_w=k_w, n_r1=p.n_r1, n_r2=p.n_r2, m=p.m, nu=p.nu,
+        mode=p.mode, lossless=lossless, r_adc=r_adc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_m, XBAR), lambda i, j, k: (i, k)),
+            pl.BlockSpec((XBAR, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+            jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, a, w_enc)

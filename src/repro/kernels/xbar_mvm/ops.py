@@ -1,0 +1,44 @@
+"""jit'd public wrapper for xbar_mvm: offset-encodes weights, pads all dims
+to tile multiples (K to the 128-row crossbar group — physically exact: a
+partially-filled crossbar still converts every bit-line), applies the exact
+digital correction term, and restores the caller's shape."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trq import TRQParams
+from repro.pim.crossbar import offset_encode
+from .kernel import XBAR, xbar_mvm_tiles
+
+
+@partial(jax.jit, static_argnames=("k_i", "k_w", "r_adc", "block_m",
+                                   "block_n", "interpret"))
+def xbar_mvm_pallas(a_uint: jax.Array, w_int: jax.Array,
+                    p: Optional[TRQParams] = None, *, k_i: int = 8,
+                    k_w: int = 8, r_adc: int = 8, block_m: int = 128,
+                    block_n: int = 128, interpret: bool = True):
+    """Bit-exact sliced-crossbar MVM with (TRQ-)ADC per bit-line.
+
+    a_uint: (M, K) ints in [0, 2**k_i); w_int: (K, N) ints in
+    [-2**(k_w-1), 2**(k_w-1)).  Returns (out (M,N) f32, ops (M,N) f32)."""
+    m_, k_ = a_uint.shape
+    n_ = w_int.shape[1]
+    u, zp = offset_encode(w_int, k_w)
+
+    pad_m = (-m_) % block_m
+    pad_n = (-n_) % block_n
+    pad_k = (-k_) % XBAR
+    a_p = jnp.pad(a_uint.astype(jnp.int32), ((0, pad_m), (0, pad_k)))
+    u_p = jnp.pad(u.astype(jnp.int32), ((0, pad_k), (0, pad_n)))
+
+    acc, ops = xbar_mvm_tiles(a_p, u_p, p, k_i=k_i, k_w=k_w, r_adc=r_adc,
+                              block_m=block_m, block_n=block_n,
+                              interpret=interpret)
+    acc = acc[:m_, :n_]
+    ops = ops[:m_, :n_]
+    corr = zp * jnp.sum(a_uint.astype(jnp.float32), axis=1, keepdims=True)
+    return acc - corr, ops

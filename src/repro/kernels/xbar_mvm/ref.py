@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for xbar_mvm: the repro.pim.crossbar bit-exact simulator
+(independent einsum formulation — no tiling, no bit tricks shared with the
+kernel), reshaped to the kernel's (out, per-output op-count) signature."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trq import TRQParams, trq_quant, trq_ad_ops
+from repro.pim.crossbar import PimConfig, offset_encode, _bl_partial_sums, _shift_add
+
+
+def xbar_mvm_ref(a_uint: jax.Array, w_int: jax.Array, p: Optional[TRQParams],
+                 cfg: PimConfig = PimConfig()):
+    """Returns (out (M,N) f32, ops (M,N) f32 summed over slices/cols/groups)."""
+    u, zp = offset_encode(w_int, cfg.k_w)
+    psums = _bl_partial_sums(a_uint, u, cfg)              # (ki,kw,G,M,N)
+    if p is None:
+        y_q = psums
+        ops = jnp.full(psums.shape, cfg.r_adc, jnp.float32)
+    else:
+        y_q = trq_quant(psums, p)
+        ops = trq_ad_ops(psums, p).astype(jnp.float32)
+    acc = _shift_add(y_q, cfg)
+    corr = zp * jnp.sum(a_uint.astype(jnp.float32), axis=1, keepdims=True)
+    return acc - corr, jnp.sum(ops, axis=(0, 1, 2))

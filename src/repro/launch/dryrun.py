@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (task §MULTI-POD DRY-RUN).
+
+Proves the distribution config is coherent without hardware: for every
+assigned (architecture × input-shape) cell, ``jit(step).lower(...)
+.compile()`` must succeed on
+
+  * the single-pod production mesh (16, 16)  = 256 chips, and
+  * the two-pod mesh             (2, 16, 16) = 512 chips,
+
+and the compiled artifact yields memory_analysis (fits-in-HBM proof) and
+cost_analysis + HLO collective bytes (§Roofline inputs).
+
+FLOP/byte accounting: XLA's cost_analysis is per-device and counts scan
+(while-loop) bodies ONCE, independent of trip count (measured — see
+EXPERIMENTS.md §Roofline).  Each single-pod cell therefore also compiles
+two depth-reduced UNROLLED variants (1 and 2 periods at full width); the
+difference is the exact per-period cost and
+
+    total = outside + n_periods * per_period,
+    outside = f(1) - per_period,  per_period = f(2) - f(1).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (build_cell, depth_variant, input_specs,
+                                skip_reason, valid_cells)
+from repro.models.registry import ARCHS, get_config
+from repro.telemetry.hlo import collective_bytes
+from repro.telemetry.roofline import model_flops, roofline
+
+HW_DEFAULT = "tpu-v5e"
+
+
+def _mesh_name(mesh) -> str:
+    return "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+
+
+def compile_cell(arch: str, shape_name: str, mesh, verbose: bool = True):
+    """lower + compile one cell; returns (compiled, seconds)."""
+    t0 = time.time()
+    cell = build_cell(arch, mesh, shape_name)
+    lowered = cell.lower()
+    compiled = lowered.compile()
+    return cell, compiled, time.time() - t0
+
+
+def cost_of(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             with_roofline: bool, out_dir=None, verbose=True) -> dict:
+    """One (arch × shape × mesh) dry-run cell -> result record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": _mesh_name(mesh),
+           "chips": chips, "status": "ok"}
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        rec.update(status="skip", reason=reason)
+        return rec
+    try:
+        cell, compiled, dt = compile_cell(arch, shape_name, mesh)
+        ma = compiled.memory_analysis()
+        rec["compile_s"] = round(dt, 1)
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        # live bytes ≈ (args - donated aliases) + outputs + temps.
+        # memory_analysis is PER-DEVICE (verified against a probe whose
+        # sharded/replicated argument sizes differ 256x) — no /chips.
+        live = (ma.argument_size_in_bytes - ma.alias_size_in_bytes
+                + ma.output_size_in_bytes + ma.temp_size_in_bytes)
+        rec["bytes_per_device"] = int(live)
+        full_cost = cost_of(compiled)
+        rec["hlo_scanned"] = full_cost
+
+        if with_roofline:
+            cfg = get_config(arch)
+            n_p = cfg.n_periods
+
+            def extrap(f1, f2, key):
+                if key == "coll":
+                    f1, f2 = f1["coll"]["total"], f2["coll"]["total"]
+                else:
+                    f1, f2 = f1[key], f2[key]
+                body = f2 - f1
+                return max(f1 - body, 0.0) + n_p * max(body, 0.0)
+
+            # FLOPs: single-chunk (full-attention) variants — the chunked
+            # kernel executes the same dot totals, but its inner scan is
+            # counted once by cost_analysis.
+            v1f = depth_variant(cfg, 1)
+            v2f = depth_variant(cfg, 2)
+            c1f = build_cell(arch, mesh, shape_name, cfg=v1f).lower().compile()
+            c2f = build_cell(arch, mesh, shape_name, cfg=v2f).lower().compile()
+            f1f, f2f = cost_of(c1f), cost_of(c2f)
+            # bytes/collectives: chunked (production) variants — the
+            # full-attention path would charge S^2 score-tensor HBM traffic
+            # the flash-chunked implementation never emits.
+            v1c = v1f.replace(attn_chunk_q=cfg.attn_chunk_q,
+                              attn_chunk_k=cfg.attn_chunk_k)
+            v2c = v2f.replace(attn_chunk_q=cfg.attn_chunk_q,
+                              attn_chunk_k=cfg.attn_chunk_k)
+            c1c = build_cell(arch, mesh, shape_name, cfg=v1c).lower().compile()
+            c2c = build_cell(arch, mesh, shape_name, cfg=v2c).lower().compile()
+            f1c, f2c = cost_of(c1c), cost_of(c2c)
+
+            # per-device -> global
+            flops_g = extrap(f1f, f2f, "flops") * chips
+            bytes_g = extrap(f1c, f2c, "bytes") * chips
+            coll_g = extrap(f1c, f2c, "coll") * chips
+            mf = model_flops(cfg, SHAPES[shape_name])
+            rep = roofline(arch, shape_name, _mesh_name(mesh), chips,
+                           flops_g, bytes_g, coll_g, mf,
+                           bytes_per_device=rec["bytes_per_device"])
+            rec["roofline"] = rep.row()
+            rec["hlo_unrolled_1p"] = {"flops_path": f1f, "bytes_path": f1c}
+            rec["hlo_unrolled_2p"] = {"flops_path": f2f, "bytes_path": f2c}
+        if verbose:
+            r = rec.get("roofline", {})
+            print(f"[ok] {arch:22s} {shape_name:12s} mesh={rec['mesh']:8s} "
+                  f"compile={dt:5.1f}s mem/dev={rec['bytes_per_device']/1e9:6.2f}GB "
+                  + (f"bottleneck={r.get('bottleneck','-'):10s} "
+                     f"roofline={r.get('roofline_frac', 0):.3f}" if r else ""),
+                  flush=True)
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=10)
+        if verbose:
+            print(f"[FAIL] {arch} {shape_name} mesh={rec['mesh']}: "
+                  f"{rec['error']}", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{rec['mesh']}.json".replace("/", "-")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true",
+                    help="skip the depth-differencing cost extrapolation")
+    ap.add_argument("--out", default=None, help="JSON output directory")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in valid_cells(a)]
+    else:
+        if not args.arch:
+            ap.error("--arch or --all required")
+        shapes = [args.shape] if args.shape else valid_cells(args.arch)
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    print(f"devices={len(jax.devices())} cells={len(cells)} "
+          f"meshes={['multi' if m else 'single' for m in meshes]}", flush=True)
+    results, failed = [], 0
+    for multi_pod in meshes:
+        for arch, shape_name in cells:
+            # roofline differencing only on the single-pod mesh (the table
+            # is single-pod; multi-pod proves the 'pod' axis shards)
+            rec = run_cell(arch, shape_name, multi_pod=multi_pod,
+                           with_roofline=(not args.no_roofline
+                                          and not multi_pod),
+                           out_dir=args.out)
+            results.append(rec)
+            failed += rec["status"] == "fail"
+    ok = sum(r["status"] == "ok" for r in results)
+    skip = sum(r["status"] == "skip" for r in results)
+    print(f"\ndry-run: {ok} ok, {skip} skip (N/A cells), {failed} FAIL "
+          f"of {len(results)}", flush=True)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

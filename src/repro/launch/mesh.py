@@ -1,0 +1,21 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run launcher sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds the 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has (smoke tests / CPU examples): (n, 1)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,253 @@
+"""Cell builders: (arch × shape × mesh) -> jit-able step + arg specs.
+
+One *cell* is an assigned (architecture, input-shape) pair on a mesh.  This
+module builds, WITHOUT allocating anything:
+
+  * the step function (train_step for ``train`` cells, serve_step for
+    prefill/decode cells),
+  * ShapeDtypeStruct stand-ins for every argument,
+  * the in/out shardings.
+
+``launch/dryrun.py`` lowers+compiles these; ``launch/train.py`` /
+``launch/serve.py`` run the same builders with real arrays on the host mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (LONG_CONTEXT_ARCHS, ModelConfig, SHAPES,
+                                ShapeConfig, TrainConfig)
+from repro.dist.sharding import param_pspecs, use_mesh
+from repro.models.registry import build_model, get_config
+from repro.serve.kvcache import cache_pspecs
+from repro.train.loop import make_train_step, shardings_for
+
+# patch-prefix length for the VLM frontend stub (internvl2: 1024-token tiles)
+VLM_PATCHES = 1024
+
+# per-arch training overrides (distributed-optimization tricks needed to fit)
+TRAIN_OVERRIDES: dict[str, dict] = {
+    # 480B params: f32 master + bf16-m + factored-v + ZeRO-1 ≈ 11 GB/chip
+    "arctic-480b": dict(optimizer_dtype="bfloat16",
+                        factored_second_moment=True),
+    "internvl2-76b": dict(optimizer_dtype="bfloat16"),
+    "deepseek-67b": dict(optimizer_dtype="bfloat16"),
+}
+# archs whose MoE expert-FFN dim is additionally sharded over 'data'
+# (weight-gather FSDP style) so expert weights fit
+MOE_FFN_SHARD_DATA = ("arctic-480b",)
+
+
+def valid_cells(arch: str) -> list[str]:
+    """Shape names this arch runs (task spec: long_500k only for
+    sub-quadratic mixers; every other cell runs everywhere)."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CONTEXT_ARCHS:
+        names.append("long_500k")
+    return names
+
+
+def skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return "N/A: 512k dense-attention decode (quadratic KV read) " \
+               "excluded by task spec; runs only for SSM/hybrid archs"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _tok(b: int, s: int):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _emb(b: int, s: int, d: int):
+    return jax.ShapeDtypeStruct((b, s, d), jnp.float32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch ShapeDtypeStructs for one cell.  Frontends are stubs: 'embeds'
+    carries precomputed patch/frame embeddings (task spec)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.encoder_layers:                     # whisper: enc frames + dec
+            return {"embeds": _emb(b, s, cfg.d_model),
+                    "tokens": _tok(b, s), "labels": _tok(b, s)}
+        if cfg.frontend == "patch":                # vlm: patch prefix + text
+            st = s - VLM_PATCHES
+            return {"embeds": _emb(b, VLM_PATCHES, cfg.d_model),
+                    "tokens": _tok(b, st), "labels": _tok(b, s)}
+        return {"tokens": _tok(b, s), "labels": _tok(b, s)}
+    if shape.kind == "prefill":
+        if cfg.encoder_layers:
+            return {"embeds": _emb(b, s, cfg.d_model), "tokens": _tok(b, s)}
+        if cfg.frontend == "patch":
+            return {"embeds": _emb(b, VLM_PATCHES, cfg.d_model),
+                    "tokens": _tok(b, s - VLM_PATCHES)}
+        return {"tokens": _tok(b, s)}
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": _tok(b, 1)}
+
+
+def batch_shardings(mesh: Mesh, specs: dict) -> dict:
+    """Batch dim over the DP axes; sequence dim unsharded at input (the
+    in-model sequence-parallel constraint reshards activations)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def one(leaf):
+        b_ax = dp if leaf.shape[0] % max(n_dp, 1) == 0 and \
+            leaf.shape[0] >= n_dp else None
+        return NamedSharding(mesh, P(*((b_ax,) + (None,) * (len(leaf.shape) - 1))))
+    return {k: one(v) for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# cell = step fn + args + shardings
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    step_fn: object            # callable
+    args: tuple                # ShapeDtypeStructs (or real arrays)
+    in_shardings: tuple
+    out_shardings: object
+    donate_argnums: tuple = ()
+
+    def jitted(self):
+        return jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+def make_train_config(arch: str, **kw) -> TrainConfig:
+    over = dict(TRAIN_OVERRIDES.get(arch, {}))
+    over.update(kw)
+    return TrainConfig(**over)
+
+
+def build_train_cell(arch: str, mesh: Mesh, shape_name: str = "train_4k",
+                     cfg: Optional[ModelConfig] = None,
+                     tc: Optional[TrainConfig] = None) -> Cell:
+    cfg = cfg or get_config(arch)
+    tc = tc or make_train_config(arch)
+    shape = SHAPES[shape_name]
+    init_fn, apply_fn, _ = build_model(cfg)
+    moe_fsdp = arch in MOE_FFN_SHARD_DATA
+
+    with use_mesh(mesh):
+        train_step, opt_init = make_train_step(apply_fn, cfg, tc)
+        params_s = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        opt_s = jax.eval_shape(opt_init, params_s)
+        p_sh, o_sh = shardings_for(mesh, params_s, opt_s, tc,
+                                   moe_ffn_shard_data=moe_fsdp)
+        batch_s = input_specs(cfg, shape)
+        b_sh = batch_shardings(mesh, batch_s)
+        step_s = jax.ShapeDtypeStruct((), jnp.int32)
+        rep = NamedSharding(mesh, P())
+
+    def step(params, opt_state, batch, step_idx):
+        with use_mesh(mesh):
+            return train_step(params, opt_state, batch, step_idx)
+
+    return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
+                args=(params_s, opt_s, batch_s, step_s),
+                in_shardings=(p_sh, o_sh, b_sh, rep),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1))
+
+
+def build_serve_cell(arch: str, mesh: Mesh, shape_name: str,
+                     cfg: Optional[ModelConfig] = None) -> Cell:
+    """prefill: full-prompt forward writing the cache, next-token logits.
+    decode: one token for every sequence against a seq_len cache."""
+    cfg = cfg or get_config(arch)
+    # serving runs the paper's datapath: weights bf16, TRQ fake-quant ON
+    cfg = cfg.replace(param_dtype="bfloat16", remat="none",
+                      pim_mode=cfg.pim_mode)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        # per-token weight gathers would multiply decode HBM traffic by the
+        # model-axis size; decode always runs Megatron-TP
+        cfg = cfg.replace(parallelism="tp")
+    init_fn, apply_fn, cache_fn = build_model(cfg)
+    b = shape.global_batch
+
+    with use_mesh(mesh):
+        params_s = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        p_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            param_pspecs(params_s,
+                         moe_ffn_shard_data=arch in MOE_FFN_SHARD_DATA))
+        cache_s = jax.eval_shape(lambda: cache_fn(b, shape.seq_len))
+        c_sh = cache_pspecs(mesh, cfg, cache_s, b)
+        batch_s = input_specs(cfg, shape)
+        b_sh = batch_shardings(mesh, batch_s)
+
+    if shape.kind == "prefill":
+        def step(params, batch):
+            with use_mesh(mesh):
+                cache = cache_fn(b, shape.seq_len)
+                logits, new_cache, _ = apply_fn(params, batch, cache=cache,
+                                                mode="prefill")
+                return jnp.argmax(logits[:, -1], -1), new_cache
+
+        return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
+                    args=(params_s, batch_s),
+                    in_shardings=(p_sh, b_sh),
+                    out_shardings=(None, c_sh))
+
+    def step(params, cache, batch):
+        with use_mesh(mesh):
+            logits, new_cache, _ = apply_fn(params, batch, cache=cache,
+                                            mode="decode")
+            return jnp.argmax(logits[:, -1], -1), new_cache
+
+    return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
+                args=(params_s, cache_s, batch_s),
+                in_shardings=(p_sh, c_sh, b_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,))
+
+
+def build_cell(arch: str, mesh: Mesh, shape_name: str,
+               cfg: Optional[ModelConfig] = None, **kw) -> Cell:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_cell(arch, mesh, shape_name, cfg=cfg, **kw)
+    return build_serve_cell(arch, mesh, shape_name, cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# depth-reduced variants for the FLOP/byte differencing (see dryrun.py)
+# ---------------------------------------------------------------------------
+
+def depth_variant(cfg: ModelConfig, n_periods: int,
+                  seq_len: int = 1 << 30) -> ModelConfig:
+    """Same width, ``n_periods`` periods, scan disabled (unrolled) so
+    cost_analysis counts every layer (scan bodies are counted once
+    regardless of trip count — measured, see EXPERIMENTS.md §Roofline).
+
+    Inner chunk scans have the same once-per-loop counting problem, so the
+    variants also force the single-chunk full-attention path (identical
+    FLOPs: the chunked kernel runs every kv block too).  The mamba/rwkv
+    chunk scans stay chunked — their state-update FLOPs are <2% of the
+    projections, an accepted undercount (DESIGN.md §7)."""
+    kw = dict(n_layers=cfg.period * n_periods, scan_layers=False,
+              attn_chunk_q=seq_len, attn_chunk_k=seq_len)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = n_periods
+    return cfg.replace(**kw)

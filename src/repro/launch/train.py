@@ -1,0 +1,124 @@
+"""End-to-end training driver.
+
+Runs any assigned arch (reduced or full config) on the host's devices with
+the same step builder the dry-run lowers for the production mesh:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
+      --steps 50 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+Fault tolerance in the loop (see train/loop.py): atomic async checkpoints,
+exact resume from the latest step (stateless data pipeline), straggler
+watchdog.  ``--resume`` restarts from the newest checkpoint, including onto
+a different device count (elastic restore).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+from repro.data.synthetic import TokenStream
+from repro.dist.sharding import use_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import MOE_FFN_SHARD_DATA, make_train_config
+from repro.models.registry import ARCHS, build_model, get_config
+from repro.train.loop import Trainer, make_train_step, shardings_for
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--pim", choices=["exact", "fake_quant"], default="exact")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-json", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke).replace(pim_mode=args.pim)
+    tc = make_train_config(args.arch, learning_rate=args.lr,
+                           total_steps=args.steps,
+                           warmup_steps=max(args.steps // 10, 1),
+                           microbatch=args.microbatch,
+                           checkpoint_every=args.ckpt_every)
+    mesh = make_host_mesh()
+    print(f"arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} "
+          f"mesh={dict(mesh.shape)} pim={cfg.pim_mode}")
+
+    init_fn, apply_fn, _ = build_model(cfg)
+    stream = TokenStream(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+
+    def batch_at(step):
+        b = stream.batch_at(step)
+        if cfg.frontend in ("patch", "frames"):
+            b["embeds"] = jnp.zeros((args.batch, 8, cfg.d_model), jnp.float32)
+        if cfg.encoder_layers:
+            b["embeds"] = jnp.zeros((args.batch, args.seq, cfg.d_model),
+                                    jnp.float32)
+        return b
+
+    with use_mesh(mesh):
+        train_step, opt_init = make_train_step(apply_fn, cfg, tc)
+        params = init_fn(jax.random.PRNGKey(args.seed))
+        opt_state = opt_init(params)
+        p_sh, o_sh = shardings_for(
+            mesh, params, opt_state, tc,
+            moe_ffn_shard_data=args.arch in MOE_FFN_SHARD_DATA)
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+
+        start = 0
+        if args.resume and args.ckpt_dir:
+            from repro.ckpt.checkpoint import latest_step, restore
+            step0 = latest_step(args.ckpt_dir)
+            if step0:
+                tree = restore(args.ckpt_dir,
+                               {"params": params, "opt": opt_state},
+                               shardings={"params": p_sh, "opt": o_sh})
+                params, opt_state = tree["params"], tree["opt"]
+                start = step0
+                print(f"resumed from step {start}")
+
+        jitted = jax.jit(train_step,
+                         in_shardings=(p_sh, o_sh, None, None),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+        trainer = Trainer(train_step=jitted, batch_at=batch_at, tc=tc,
+                          ckpt_dir=args.ckpt_dir)
+        params, opt_state, report = trainer.run(params, opt_state,
+                                                start_step=start,
+                                                num_steps=args.steps,
+                                                on_metrics=lambda r: print(
+                                                    f"step {r['step']:5d} "
+                                                    f"loss {r['loss']:.4f} "
+                                                    f"({r['step_time_s']:.2f}s)",
+                                                    flush=True))
+    print(f"median step {report['median_step_s']:.3f}s, "
+          f"stragglers flagged: {len(report['stragglers'])}")
+    first = report["history"][0]["loss"]
+    last = report["history"][-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f}")
+    if args.log_json:
+        with open(args.log_json, "w") as f:
+            json.dump(report, f, indent=1)
+    from repro.ckpt.checkpoint import wait_pending
+    wait_pending()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+"""repro.models — pure-JAX functional model zoo.
+
+Params are plain nested dicts; each component exposes ``init_*(key, cfg)``
+and ``apply_*`` functions.  All layer stacks are scanned (compile time O(1)
+in depth).  Every weight-stationary matmul routes through ``pim_linear`` so
+the paper's TRQ datapath is a config switch, not a code path.
+"""
+from .registry import get_config, list_archs, build_model

@@ -1,0 +1,278 @@
+"""CNNs for the paper's own evaluation (§V: LeNet-5, ResNet-20-class) with
+three inference datapaths:
+
+  float      — plain f32 (training & the "f/f" reference row of Fig. 6)
+  bit_exact  — full ISAAC sliced-crossbar sim with per-conversion (TRQ-)ADC
+               (the "8/f + ADC" rows of Fig. 6a/6b) + exact A/D op counts
+  fake       — per-group TRQ abstraction (fast sanity path)
+
+Weights/activations use 8-bit symmetric/unsigned PTQ with max-abs scaling
+(paper §V-A).  Norm-free conv blocks (He init) keep the PIM fold-in trivial;
+the paper's BN folds into conv weights at deployment anyway.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trq import TRQParams
+from repro.pim.crossbar import PimConfig, bit_exact_mvm
+from repro.pim.mapping import conv2d_pim, conv2d_bl_samples, im2col, map_conv2d, map_linear
+
+
+# ---------------------------------------------------------------------------
+# float path
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, k, cin, cout):
+    fan_in = k * k * cin
+    return {"w": jax.random.normal(key, (k, k, cin, cout), jnp.float32)
+            * np.sqrt(2.0 / fan_in), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _fc_init(key, din, dout):
+    return {"w": jax.random.normal(key, (din, dout), jnp.float32)
+            * np.sqrt(2.0 / din), "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def conv2d(x, p, stride=1, pad="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+
+
+def avgpool(x, k=2):
+    return jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, k, k, 1),
+                                 (1, k, k, 1), "VALID") / (k * k)
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNSpec:
+    name: str
+    layers: tuple            # sequence of ('conv', k, cin, cout, stride, pad)
+                             # / ('pool', k) / ('fc', din, dout) / ('relu',)
+                             # / ('gap',) global average pool
+    input_hw: int
+    in_ch: int
+    n_classes: int
+
+
+LENET5 = CNNSpec("lenet5", (
+    ("conv", 5, 1, 6, 1, "SAME"), ("relu",), ("pool", 2),
+    ("conv", 5, 6, 16, 1, "VALID"), ("relu",), ("pool", 2),
+    ("flatten",),
+    ("fc", 400, 120), ("relu",),
+    ("fc", 120, 84), ("relu",),
+    ("fc", 84, 10),
+), 28, 1, 10)
+
+
+def _resnet20_layers():
+    ls = [("conv", 3, 3, 16, 1, "SAME"), ("relu",)]
+    cin = 16
+    for stage, ch in enumerate((16, 32, 64)):
+        for blk in range(3):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            ls += [("res_begin",),
+                   ("conv", 3, cin, ch, stride, "SAME"), ("relu",),
+                   ("conv", 3, ch, ch, 1, "SAME"),
+                   ("res_end", cin, ch, stride), ("relu",)]
+            cin = ch
+    ls += [("gap",), ("fc", 64, 10)]
+    return tuple(ls)
+
+
+RESNET20 = CNNSpec("resnet20", _resnet20_layers(), 32, 3, 10)
+
+
+def init_cnn(key, spec: CNNSpec):
+    params = {}
+    i = 0
+    for li, l in enumerate(spec.layers):
+        if l[0] == "conv":
+            key, k2 = jax.random.split(key)
+            params[f"conv{li}"] = _conv_init(k2, l[1], l[2], l[3])
+        elif l[0] == "fc":
+            key, k2 = jax.random.split(key)
+            params[f"fc{li}"] = _fc_init(k2, l[1], l[2])
+        elif l[0] == "res_end":
+            cin, cout, stride = l[1], l[2], l[3]
+            if cin != cout or stride != 1:
+                key, k2 = jax.random.split(key)
+                params[f"proj{li}"] = _conv_init(k2, 1, cin, cout)
+    return params
+
+
+def apply_cnn(params, x, spec: CNNSpec,
+              tap: Optional[Callable[[str, jax.Array], None]] = None):
+    """Float forward.  ``tap(name, pre_activation)`` observes layer inputs
+    (used by PTQ calibration to fix activation scales)."""
+    res_stack = []
+    for li, l in enumerate(spec.layers):
+        if l[0] == "conv":
+            if tap:
+                tap(f"conv{li}", x)
+            x = conv2d(x, params[f"conv{li}"], l[4], l[5])
+        elif l[0] == "fc":
+            if tap:
+                tap(f"fc{li}", x)
+            x = x @ params[f"fc{li}"]["w"] + params[f"fc{li}"]["b"]
+        elif l[0] == "relu":
+            x = jax.nn.relu(x)
+        elif l[0] == "pool":
+            x = avgpool(x, l[1])
+        elif l[0] == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif l[0] == "gap":
+            x = x.mean(axis=(1, 2))
+        elif l[0] == "res_begin":
+            res_stack.append(x)
+        elif l[0] == "res_end":
+            skip = res_stack.pop()
+            cin, cout, stride = l[1], l[2], l[3]
+            if cin != cout or stride != 1:
+                skip = conv2d(skip, params[f"proj{li}"], stride, "SAME")
+            x = x + skip
+    return x
+
+
+# ---------------------------------------------------------------------------
+# PTQ + PIM inference path
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QuantizedCNN:
+    spec: CNNSpec
+    params: dict             # float params (for pool/residual paths)
+    w_int: dict              # int8 weights per pim layer
+    w_scale: dict            # per-layer weight scales
+    a_scale: dict            # per-layer activation scales (uint8 grid)
+    a_zero: dict             # per-layer activation zero-points (asymmetric)
+    pim_layers: tuple        # names in order
+
+
+def quantize_cnn(params, spec: CNNSpec, calib_x: jax.Array) -> QuantizedCNN:
+    """8-bit symmetric weights + asymmetric unsigned 8-bit activations
+    (min/max scales from a calibration batch), per paper §V-A.
+
+    The DAC feeds unsigned codes; real-valued zero encodes as the zero-point
+    ``zp`` and the digital S+A subtracts the exact ``zp * colsum(W)``
+    correction (same mechanism as the offset-encoded weights).  Post-ReLU
+    layers get zp = 0 automatically."""
+    lo, hi = {}, {}
+
+    def tap(n, v):
+        lo[n] = jnp.minimum(jnp.min(v), 0.0)
+        hi[n] = jnp.max(v)
+
+    apply_cnn(params, calib_x, spec, tap=tap)
+    w_int, w_scale, a_scale, a_zero, names = {}, {}, {}, {}, []
+    for li, l in enumerate(spec.layers):
+        if l[0] == "conv":
+            name = f"conv{li}"
+        elif l[0] == "fc":
+            name = f"fc{li}"
+        else:
+            continue
+        names.append(name)
+        w = params[name]["w"]
+        ws = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / 127.0
+        w_int[name] = jnp.clip(jnp.round(w / ws), -128, 127).astype(jnp.int32)
+        w_scale[name] = ws
+        span = jnp.maximum(hi[name] - lo[name], 1e-8)
+        a_scale[name] = span / 255.0
+        a_zero[name] = jnp.round(-lo[name] / a_scale[name]).astype(jnp.int32)
+    return QuantizedCNN(spec, params, w_int, w_scale, a_scale, a_zero,
+                        tuple(names))
+
+
+def pim_forward(q: QuantizedCNN, x: jax.Array,
+                trq_per_layer: Optional[dict] = None,
+                cfg: PimConfig = PimConfig(), with_ops: bool = False,
+                tap_bl: Optional[Callable[[str, jax.Array], None]] = None):
+    """Bit-exact PIM inference.  ``trq_per_layer[name]`` is a TRQParams (or
+    None for the native full-precision R_ADC conversion).  Activations are
+    re-quantized unsigned-8b before each PIM layer (SH+DAC behavior)."""
+    spec = q.spec
+    res_stack = []
+    total_ops = 0.0
+    for li, l in enumerate(spec.layers):
+        if l[0] in ("conv", "fc"):
+            name = f"{'conv' if l[0] == 'conv' else 'fc'}{li}"
+            trq = (trq_per_layer or {}).get(name)
+            a_s = q.a_scale[name]
+            zp = q.a_zero[name]
+            xq = jnp.clip(jnp.round(x / a_s) + zp, 0, 255).astype(jnp.int32)
+            if tap_bl is not None:
+                if l[0] == "conv":
+                    tap_bl(name, conv2d_bl_samples(xq, q.w_int[name],
+                                                   stride=l[4],
+                                                   pad=_pad_amount(l),
+                                                   pad_value=zp, cfg=cfg))
+                else:
+                    from repro.pim.crossbar import collect_bl_samples
+                    tap_bl(name, collect_bl_samples(xq, q.w_int[name], cfg))
+            if l[0] == "conv":
+                out = conv2d_pim(xq, q.w_int[name], trq, stride=l[4],
+                                 pad=_pad_amount(l), pad_value=zp, cfg=cfg,
+                                 with_ops=with_ops)
+            else:
+                out = bit_exact_mvm(xq, q.w_int[name], trq, cfg,
+                                    with_ops=with_ops)
+            if with_ops:
+                out, ops = out
+                total_ops = total_ops + ops
+            # digital zero-point correction: (xq - zp) @ W = out - zp*colsum
+            w_cols = jnp.sum(q.w_int[name].astype(jnp.float32),
+                             axis=tuple(range(q.w_int[name].ndim - 1)))
+            out = out - zp.astype(jnp.float32) * w_cols
+            x = out * (a_s * q.w_scale[name]) + q.params[name]["b"]
+        elif l[0] == "relu":
+            x = jax.nn.relu(x)
+        elif l[0] == "pool":
+            x = avgpool(x, l[1])
+        elif l[0] == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif l[0] == "gap":
+            x = x.mean(axis=(1, 2))
+        elif l[0] == "res_begin":
+            res_stack.append(x)
+        elif l[0] == "res_end":
+            skip = res_stack.pop()
+            cin, cout, stride = l[1], l[2], l[3]
+            if cin != cout or stride != 1:
+                skip = conv2d(skip, q.params[f"proj{li}"], stride, "SAME")
+            x = x + skip
+    return (x, total_ops) if with_ops else x
+
+
+def _pad_amount(l) -> int:
+    # SAME for stride-1 3x3/5x5 convs used here
+    return (l[1] // 2) if l[5] == "SAME" else 0
+
+
+def uniform_conversions(q: QuantizedCNN, n_images: int,
+                        cfg: PimConfig = PimConfig()) -> int:
+    """Total A/D conversions per ``n_images`` inferences (Eq. 4), for the
+    energy baseline."""
+    total = 0
+    hw = {name: None for name in q.pim_layers}
+    # walk shapes symbolically
+    x_hw, ch = q.spec.input_hw, q.spec.in_ch
+    for li, l in enumerate(q.spec.layers):
+        if l[0] == "conv":
+            stride = l[4]
+            out_hw = x_hw // stride
+            m = map_conv2d(f"conv{li}", l[2], l[3], l[1], out_hw, out_hw, cfg)
+            total += m.conversions_per_inference
+            x_hw, ch = out_hw, l[3]
+        elif l[0] == "pool":
+            x_hw //= l[1]
+        elif l[0] == "fc":
+            m = map_linear(f"fc{li}", l[1], l[2], 1, cfg)
+            total += m.conversions_per_inference
+    return total * n_images

@@ -1,0 +1,185 @@
+"""Whisper-style encoder-decoder backbone (conv frontend is a STUB per the
+task spec: ``input_specs()`` supplies precomputed frame embeddings).
+
+Encoder: bidirectional attention over frame embeddings + sinusoidal pos.
+Decoder: causal self-attention + cross-attention to encoder output.
+Both stacks are scanned; decode mode carries a self-attn KV cache and the
+precomputed per-layer cross-attention KV.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from .attention import (apply_attention, apply_cross_attention, encoder_kv,
+                        init_attention, init_cross_attention)
+from .layers import (cdtype, embed, init_embed, init_linear, init_mlp,
+                     init_layernorm, apply_mlp, layernorm, pim_linear,
+                     sinusoid_pos)
+
+
+def _sinusoid_at(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding evaluated at (B,S) integer positions."""
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, jnp.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_layernorm(cfg.d_model),
+            "attn": init_attention(k1, cfg, bias=True),
+            "ln2": init_layernorm(cfg.d_model),
+            "mlp": init_mlp(k2, cfg, bias=True)}
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_layernorm(cfg.d_model),
+            "attn": init_attention(k1, cfg, bias=True),
+            "ln_x": init_layernorm(cfg.d_model),
+            "xattn": init_cross_attention(k2, cfg),
+            "ln2": init_layernorm(cfg.d_model),
+            "mlp": init_mlp(k3, cfg, bias=True)}
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ke, kd, kt, kf = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "frontend": {"frame_proj": init_linear(kf, cfg.d_model, cfg.d_model,
+                                               cfg, bias=True)},
+        "embed": init_embed(kt, cfg),
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_layernorm(cfg.d_model),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "dec_norm": init_layernorm(cfg.d_model),
+    }
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, T, D) precomputed frame embeddings (stub frontend)."""
+    x = pim_linear(params["frontend"]["frame_proj"],
+                   frames.astype(cdtype(cfg)), cfg)
+    x = x + sinusoid_pos(x.shape[1], cfg.d_model, x.dtype)[None]
+    x = shard(x, "batch", "seq", None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x_, lp):
+        h = layernorm(lp["ln1"], x_, cfg.norm_eps)
+        o, _ = apply_attention(lp["attn"], h, cfg, positions, causal=False,
+                               rope=False)
+        x_ = x_ + o
+        h = layernorm(lp["ln2"], x_, cfg.norm_eps)
+        x_ = x_ + apply_mlp(lp["mlp"], h, cfg)
+        return shard(x_, "batch", "seq", None), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    return layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def cross_kv(params, enc_out: jax.Array, cfg: ModelConfig):
+    """Per-decoder-layer cross KV, stacked on the layer axis."""
+    def one(lp):
+        return encoder_kv(lp["xattn"], enc_out, cfg)
+    return jax.vmap(one, in_axes=0, out_axes=0)(params["dec"])
+
+
+def decode_stack(params, tokens: jax.Array, enc_out: Optional[jax.Array],
+                 cfg: ModelConfig, *, cache: Optional[dict] = None,
+                 xkv: Optional[dict] = None, mode: str = "train"):
+    """tokens: (B, Sd).  Either enc_out or precomputed xkv must be given.
+    Returns (logits, new_cache)."""
+    x = embed(params["embed"], tokens).astype(cdtype(cfg))
+    b, s, _ = x.shape
+    if mode == "decode" and cache is not None:
+        positions = cache["len0"][:, None]              # (B,1)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+    x = x + _sinusoid_at(positions, cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", "seq", None)
+    if xkv is None:
+        xkv = cross_kv(params, enc_out, cfg)
+
+    def body(carry, inputs):
+        x_, = carry
+        lp, lc, lxkv = inputs
+        h = layernorm(lp["ln1"], x_, cfg.norm_eps)
+        o, nc = apply_attention(lp["attn"], h, cfg, positions,
+                                cache=lc, rope=False)
+        x_ = x_ + o
+        h = layernorm(lp["ln_x"], x_, cfg.norm_eps)
+        x_ = x_ + apply_cross_attention(lp["xattn"], h, lxkv, cfg)
+        h = layernorm(lp["ln2"], x_, cfg.norm_eps)
+        x_ = x_ + apply_mlp(lp["mlp"], h, cfg)
+        x_ = shard(x_, "batch", "seq", None)
+        return (x_,), (nc if lc is not None else 0)
+
+    body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    layer_cache = cache["layers"] if cache is not None else None
+    (x,), new_layer_cache = jax.lax.scan(
+        body_fn, (x,), (params["dec"], layer_cache, xkv))
+
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    if mode in ("decode", "prefill"):
+        x = x[:, -1:]          # serving: next-token logits only
+    logits = (x.astype(jnp.float32) @
+              params["embed"]["tok"].astype(jnp.float32).T)
+    logits = shard(logits, "batch", None, "vocab")
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": new_layer_cache,
+                     "len0": (cache["len0"] + (1 if mode == "decode" else s))}
+    return logits, new_cache
+
+
+def init_dec_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16, enc_len: Optional[int] = None):
+    """Self-attn KV + (zeroed) cross-KV slots; prefill overwrites xkv with
+    the real encoder projections.  ``enc_len`` defaults to ``max_len``
+    (decode cells: a seq_len-deep encoder context)."""
+    enc_len = enc_len if enc_len is not None else max_len
+    kv = {"k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                          cfg.hd), dtype),
+          "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                          cfg.hd), dtype),
+          "len": jnp.zeros((cfg.n_layers, batch), jnp.int32)}
+    xkv = {"k": jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_kv_heads,
+                           cfg.hd), dtype),
+           "v": jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_kv_heads,
+                           cfg.hd), dtype)}
+    return {"layers": kv, "len0": jnp.zeros((batch,), jnp.int32),
+            "xkv": xkv}
+
+
+def apply_encdec(params, batch: dict, cfg: ModelConfig, *,
+                 cache: Optional[dict] = None, mode: str = "train"):
+    """batch: {'embeds': (B,T,D) frames, 'tokens': (B,Sd)} (train/prefill)
+    or {'tokens': (B,1)} (decode; cross-KV lives in the cache).
+
+    Returns (logits, cache|None, aux).  The serving cache is
+    {'layers': self-attn KV, 'len0': dec position, 'xkv': cross KV}."""
+    if mode == "decode":
+        inner = {"layers": cache["layers"], "len0": cache["len0"]}
+        logits, nc = decode_stack(params, batch["tokens"], None, cfg,
+                                  cache=inner, xkv=cache["xkv"], mode=mode)
+        nc["xkv"] = cache["xkv"]
+        return logits, nc, jnp.float32(0)
+    enc_out = encode(params, batch["embeds"], cfg)
+    xkv = cross_kv(params, enc_out, cfg)
+    inner = None
+    if cache is not None:
+        inner = {"layers": cache["layers"], "len0": cache["len0"]}
+    logits, nc = decode_stack(params, batch["tokens"], None, cfg,
+                              cache=inner, xkv=xkv, mode=mode)
+    if nc is not None:
+        nc["xkv"] = xkv
+    return logits, nc, jnp.float32(0)

@@ -1,0 +1,164 @@
+"""Shared layers: norms, embeddings, RoPE, PimLinear, MLP."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TRQConfig
+from repro.core.trq import TRQParams
+from repro.pim.crossbar import fake_quant_mvm
+from repro.dist.sharding import shard
+
+
+def cdtype(cfg: ModelConfig):
+    """Compute dtype (activations)."""
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def pdtype(cfg: ModelConfig):
+    """Parameter storage dtype (f32 master weights for training; serving
+    configs flip to bf16)."""
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# PimLinear — the paper's technique as a first-class layer (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def trq_params_from_cfg(t: TRQConfig) -> TRQParams:
+    return TRQParams(delta_r1=jnp.float32(t.delta_r1), bias=jnp.float32(t.bias),
+                     n_r1=t.n_r1, n_r2=t.n_r2, m=t.m, signed=t.signed)
+
+
+def init_linear(key, d_in: int, d_out: int, cfg: ModelConfig,
+                bias: bool = False, scale: Optional[float] = None):
+    std = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+               ).astype(pdtype(cfg))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), pdtype(cfg))
+    return p
+
+
+def pim_linear(p: dict, x: jax.Array, cfg: ModelConfig,
+               trq: Optional[TRQParams] = None) -> jax.Array:
+    """x @ w on the selected PIM datapath.
+
+    exact       -> plain matmul (training / FP baseline; the paper trains
+                   digitally and deploys PTQ inference on the crossbars).
+    fake_quant  -> per-128-row-group signed TRQ on partial sums (the paper's
+                   §III-B abstraction; trq_group_mvm kernel on real TPU).
+    """
+    w = p["w"]
+    if cfg.parallelism == "fsdp_cp" and w.ndim == 2:
+        # ZeRO-3-style: gather the (sharded) weight, compute seq-local.
+        # The AG has no dependence on the previous layer's activations, so
+        # the latency-hiding scheduler prefetches it under compute.
+        w = shard(w, None, None)
+    if cfg.pim_mode == "fake_quant":
+        t = trq if trq is not None else trq_params_from_cfg(cfg.trq)
+        # dynamic per-tensor scales put partial sums on the ADC integer grid
+        a_s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6) / 127.0
+        w_s = jnp.maximum(jnp.max(jnp.abs(w)), 1e-6) / 127.0
+        grid = (a_s * w_s * cfg.trq.delta_grid).astype(jnp.float32)
+        y = fake_quant_mvm(x, w.astype(x.dtype), t, grid, 1.0, ste=True,
+                           auto_range=(trq is None and cfg.trq.auto_range))
+    else:
+        y = x @ w.astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (n * p["scale"]).astype(x.dtype)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)) * p["scale"] + p["bias"]
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / RoPE
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig):
+    tok = jax.random.normal(key, (cfg.vocab_size, cfg.d_model), jnp.float32)
+    return {"tok": (tok * cfg.d_model ** -0.5).astype(pdtype(cfg))}
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def rope_freqs(cfg: ModelConfig) -> jax.Array:
+    hd = cfg.hd
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    ang = positions[..., None].astype(jnp.float32) * rope_freqs(cfg)   # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_pos(seq: int, d: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, jnp.float32) / d))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated-SiLU llama-style, or GELU whisper-style)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None,
+             bias: bool = False):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": init_linear(ks[1], cfg.d_model, d_ff, cfg, bias=bias),
+         "w_down": init_linear(ks[2], d_ff, cfg.d_model, cfg, bias=bias)}
+    if cfg.mlp_act == "silu":
+        p["w_gate"] = init_linear(ks[0], cfg.d_model, d_ff, cfg, bias=bias)
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig,
+              trq: Optional[TRQParams] = None) -> jax.Array:
+    up = pim_linear(p["w_up"], x, cfg, trq)
+    if cfg.mlp_act == "silu":
+        gate = pim_linear(p["w_gate"], x, cfg, trq)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    if h.ndim == 3:
+        h = shard(h, "batch", "seq", None) if cfg.parallelism == "fsdp_cp" \
+            else shard(h, "batch", None, "ffn")
+    return pim_linear(p["w_down"], h, cfg, trq)

@@ -1,0 +1,155 @@
+"""Mamba (S6) selective-state-space mixer — jamba's non-attention layers.
+
+Recurrence (per channel c, state n):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t ;   y_t = C_t . h_t + D x_t
+
+Training/prefill runs a chunked parallel scan: ``lax.scan`` over sequence
+chunks carrying the (B, d_inner, d_state) state, with a log-depth
+``associative_scan`` inside each chunk — live memory is O(chunk) states,
+compile size O(1) in sequence length.  Decode is the O(1) recurrence.
+The in/out projections are PimLinear (TRQ-quantizable); the scan itself is
+element-wise state math — not a crossbar op (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.trq import TRQParams
+from repro.dist.sharding import shard
+from .layers import cdtype, pdtype, init_linear, pim_linear
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba(key, cfg: ModelConfig):
+    di, ds, dc = d_inner(cfg), cfg.ssm_d_state, cfg.ssm_d_conv
+    dt_rank = max(cfg.d_model // 16, 1)
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": init_linear(ks[0], cfg.d_model, 2 * di, cfg),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32) * dc ** -0.5).astype(dt),
+        "x_proj": init_linear(ks[2], di, dt_rank + 2 * ds, cfg),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, di), jnp.float32)
+                    * dt_rank ** -0.5).astype(dt),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "a_log": jnp.log(a),
+        "d": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(ks[5], di, cfg.d_model, cfg),
+    }
+
+
+def _ssm_coeffs(p, xc, cfg: ModelConfig, trq):
+    """xc: (B,S,di) post-conv activations -> (delta (B,S,di) f32,
+    B_t (B,S,ds), C_t (B,S,ds)).  The (B,S,di,ds) decay/drive tensors are
+    NOT formed here — they are materialized chunk-by-chunk inside the scan
+    (live bytes O(chunk), not O(S))."""
+    ds = cfg.ssm_d_state
+    dt_rank = p["dt_proj"].shape[0]
+    proj = pim_linear(p["x_proj"], xc, cfg, trq)
+    dt_r, b_, c_ = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    delta = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                            + p["dt_bias"])                   # (B,S,di)
+    return delta, b_.astype(jnp.float32), c_.astype(jnp.float32)
+
+
+def _decay_drive(delta, xc, b_, a_neg):
+    """(chunk-local) a = exp(-delta*A), bx = delta*x*B."""
+    a = jnp.exp(-delta[..., None] * a_neg)                    # (...,di,ds)
+    bx = (delta * xc.astype(jnp.float32))[..., None] * b_[..., None, :]
+    return a, bx
+
+
+def _chunk_scan(a, bx, h0):
+    """Associative scan within a chunk.  a,bx: (B,C,di,ds); h0: (B,di,ds)."""
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    a_s, b_s = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    h = a_s * h0[:, None] + b_s                               # (B,C,di,ds)
+    return h, h[:, -1]
+
+
+def ssm_scan(delta, xc, b_, c_, a_neg, h0, chunk: int):
+    """Full selective scan.  delta/xc: (B,S,di); b_/c_: (B,S,ds); h0 state.
+    Decay/drive tensors are formed per chunk inside the scan body."""
+    b, s, di = delta.shape
+    ds = b_.shape[-1]
+    nc = s // chunk
+
+    def chunked(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    def body(h, args):
+        dc, xcc, bc, cc = args
+        ac, bxc = _decay_drive(dc, xcc, bc, a_neg)
+        hs, h_last = _chunk_scan(ac, bxc, h)
+        y = jnp.einsum("bcds,bcs->bcd", hs, cc)
+        return h_last, y
+
+    h_last, ys = jax.lax.scan(
+        body, h0, (chunked(delta), chunked(xc), chunked(b_), chunked(c_)))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    return y, h_last
+
+
+def causal_conv(x, w, state: Optional[jax.Array] = None):
+    """Depthwise causal conv.  x: (B,S,di); w: (dc,di); state: (B,dc-1,di)."""
+    dc = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(dc))
+    return y, xp[:, -(dc - 1):, :]
+
+
+def apply_mamba(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
+                trq: Optional[TRQParams] = None):
+    """x: (B,S,D).  cache (decode): {'h': (B,di,ds), 'conv': (B,dc-1,di)}."""
+    b, s, _ = x.shape
+    di, ds = d_inner(cfg), cfg.ssm_d_state
+    xz = pim_linear(p["in_proj"], x, cfg, trq)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shard(xi, "batch", None, "inner")
+
+    conv_state = cache.get("conv") if cache else None
+    xc, conv_state = causal_conv(xi, p["conv_w"].astype(xi.dtype), conv_state)
+    xc = jax.nn.silu(xc)
+
+    delta, b_, c_ = _ssm_coeffs(p, xc, cfg, trq)
+    a_neg = jnp.exp(p["a_log"])                           # (di, ds) "A"
+    h0 = cache["h"] if cache else jnp.zeros((b, di, ds), jnp.float32)
+
+    if s == 1 and cache is not None:                      # decode: O(1) step
+        a1, bx1 = _decay_drive(delta[:, 0], xc[:, 0], b_[:, 0], a_neg)
+        h = a1 * h0 + bx1
+        y = jnp.einsum("bds,bs->bd", h, c_[:, 0])[:, None, :]
+        h_last = h
+    else:
+        chunk = min(cfg.ssm_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+            xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+            b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0)))
+            c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xc_p = xc
+        y, h_last = ssm_scan(delta, xc_p, b_, c_, a_neg, h0, chunk)
+        y = y[:, :s]
+
+    y = y + xc.astype(jnp.float32) * p["d"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = pim_linear(p["out_proj"], y, cfg, trq)
+    new_cache = {"h": h_last, "conv": conv_state} if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,68 @@
+"""Architecture registry: --arch <id> -> (config, init_fn, apply_fn)."""
+from __future__ import annotations
+
+import importlib
+from typing import Callable
+
+from repro.configs.base import ModelConfig
+
+ARCHS = (
+    "jamba-v0.1-52b",
+    "deepseek-67b",
+    "deepseek-7b",
+    "llama3.2-3b",
+    "glm4-9b",
+    "granite-moe-3b-a800m",
+    "arctic-480b",
+    "rwkv6-7b",
+    "internvl2-76b",
+    "whisper-medium",
+)
+
+
+def _module_name(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def list_archs():
+    return ARCHS
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch)}")
+    return mod.smoke() if smoke else mod.CONFIG
+
+
+def build_model(cfg: ModelConfig):
+    """Returns (init_fn(key) -> params, apply_fn(params, batch, cache, mode)
+    -> (logits, cache, aux), init_cache_fn(batch, max_len))."""
+    if cfg.encoder_layers > 0:
+        from . import encdec
+
+        def init_fn(key):
+            return encdec.init_encdec(key, cfg)
+
+        def apply_fn(params, batch, cache=None, mode="train"):
+            return encdec.apply_encdec(params, batch, cfg, cache=cache,
+                                       mode=mode)
+
+        def cache_fn(batch_size, max_len, dtype=None):
+            import jax.numpy as jnp
+            return encdec.init_dec_cache(cfg, batch_size, max_len,
+                                         dtype or jnp.bfloat16)
+
+        return init_fn, apply_fn, cache_fn
+
+    from . import lm
+
+    def init_fn(key):
+        return lm.init_lm(key, cfg)
+
+    def apply_fn(params, batch, cache=None, mode="train"):
+        return lm.apply_lm(params, batch, cfg, cache=cache, mode=mode)
+
+    def cache_fn(batch_size, max_len, dtype=None):
+        import jax.numpy as jnp
+        return lm.init_cache(cfg, batch_size, max_len, dtype or jnp.bfloat16)
+
+    return init_fn, apply_fn, cache_fn

@@ -1,0 +1,169 @@
+"""RWKV6 "Finch" time-mix: attention-free token mixer with data-dependent
+per-channel decay (arXiv:2404.05892).
+
+Recurrence per head (k,r: (hs,), v: (hs,), state S: (hs_k, hs_v)):
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+    out_t = r_t S_{t-1} + (r_t . (u (*) k_t)) v_t
+
+Chunked evaluation (lax.scan over chunks carrying S): within a chunk the
+pairwise decay products are computed in LOG space,
+``exp(L_{t-1} - L_j)  (j < t)`` with ``L_t = cumsum(log w)``, which is
+bounded in (0, 1] — no cumprod underflow.  Cost per chunk is O(c^2 hs) like
+an attention block; cross-chunk state is O(1) in sequence length, which is
+what makes the 500k-token decode cell feasible (DESIGN.md §5).
+
+Simplification vs the full Finch block (recorded in DESIGN.md): the five
+token-shift interpolations use static learned mu's (the low-rank dynamic
+ddlerp is omitted); the decay keeps its full data-dependent LoRA form since
+that is the defining RWKV6 feature.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.trq import TRQParams
+from repro.dist.sharding import shard
+from .layers import cdtype, pdtype, init_linear, pim_linear
+
+
+def _dims(cfg: ModelConfig):
+    hs = cfg.rwkv_head_size
+    h = cfg.d_model // hs
+    return h, hs
+
+
+def init_rwkv(key, cfg: ModelConfig):
+    h, hs = _dims(cfg)
+    d, da = cfg.d_model, h * hs
+    lora = 64
+    ks = jax.random.split(key, 8)
+    dt = pdtype(cfg)
+    p = {
+        "mu": jnp.full((5, d), 0.5, jnp.float32),     # r,k,v,w,g token-shift
+        "w_r": init_linear(ks[0], d, da, cfg),
+        "w_k": init_linear(ks[1], d, da, cfg),
+        "w_v": init_linear(ks[2], d, da, cfg),
+        "w_g": init_linear(ks[3], d, da, cfg),
+        "decay_w": jnp.linspace(-6.0, -1.0, da, dtype=jnp.float32),
+        "decay_lora_a": (jax.random.normal(ks[4], (d, lora), jnp.float32)
+                         * d ** -0.5).astype(dt),
+        "decay_lora_b": jnp.zeros((lora, da), dt),
+        "bonus_u": jnp.zeros((da,), jnp.float32),
+        "w_o": init_linear(ks[5], da, d, cfg),
+        "ln_x": {"scale": jnp.ones((da,), jnp.float32),
+                 "bias": jnp.zeros((da,), jnp.float32)},
+    }
+    return p
+
+
+def _heads(x, h, hs):
+    return x.reshape(*x.shape[:-1], h, hs)
+
+
+def _chunk_wkv(r, k, v, logw, u, s0):
+    """One chunk.  r,k,v,logw: (B,H,c,hs); u: (H,hs); s0: (B,H,hs,hs).
+    Returns (out (B,H,c,hs), s_end)."""
+    c = r.shape[2]
+    l_ = jnp.cumsum(logw, axis=2)                       # L_t, t = 1..c
+    l_prev = l_ - logw                                  # L_{t-1}
+    # inter-chunk: r_t (*) exp(L_{t-1}) applied to carried state
+    inter = jnp.einsum("bhtk,bhkv->bhtv", r * jnp.exp(l_prev), s0)
+    # intra-chunk pairwise: att[t,j] = sum_k r_tk k_jk exp(L_{t-1,k}-L_{j,k})
+    dmat = jnp.exp(l_prev[:, :, :, None, :] - l_[:, :, None, :, :])
+    att = jnp.einsum("bhtk,bhjk,bhtjk->bhtj", r, k, dmat)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)       # j < t strictly
+    att = jnp.where(mask[None, None], att, 0.0)
+    intra = jnp.einsum("bhtj,bhjv->bhtv", att, v)
+    # current-token bonus: (r_t . (u (*) k_t)) v_t
+    bonus = jnp.einsum("bhtk,bhtk->bht", r, u[None, :, None, :] * k)
+    out = inter + intra + bonus[..., None] * v
+    # state to carry: S_end = diag(exp(L_c)) s0 + sum_j (k_j exp(L_c-L_j))^T v_j
+    l_c = l_[:, :, -1:, :]                              # (B,H,1,hs)
+    kd = k * jnp.exp(l_c - l_)
+    s_end = jnp.exp(l_c[:, :, 0])[..., None] * s0 + \
+        jnp.einsum("bhjk,bhjv->bhkv", kd, v)
+    return out, s_end
+
+
+def wkv_scan(r, k, v, logw, u, s0, chunk: int):
+    """r,k,v,logw: (B,H,S,hs) f32.  Scan over S/chunk chunks."""
+    b, h, s, hs = r.shape
+    nc = s // chunk
+
+    def c_split(t):
+        return t.reshape(b, h, nc, chunk, hs).swapaxes(0, 2).swapaxes(1, 2)
+
+    rc, kc, vc, wc = map(c_split, (r, k, v, logw))      # (nc,B,H,c,hs)
+
+    def body(sc, args):
+        rr, kk, vv, ww = args
+        out, s_next = _chunk_wkv(rr, kk, vv, ww, u, sc)
+        return s_next, out
+
+    s_end, outs = jax.lax.scan(body, s0, (rc, kc, vc, wc))
+    out = outs.swapaxes(1, 2).swapaxes(0, 2).reshape(b, h, s, hs)
+    return out, s_end
+
+
+def apply_rwkv(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
+               trq: Optional[TRQParams] = None):
+    """x: (B,S,D).  cache (decode/prefill): {'s': (B,H,hs,hs) f32,
+    'x_prev': (B,1,D)}."""
+    b, s, d = x.shape
+    h, hs = _dims(cfg)
+
+    x_prev = cache["x_prev"] if cache is not None else jnp.zeros(
+        (b, 1, d), x.dtype)
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)   # token shift
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mu[i] * (xs - x) for i in range(5))
+
+    r = pim_linear(p["w_r"], xr, cfg, trq).astype(jnp.float32)
+    k = pim_linear(p["w_k"], xk, cfg, trq).astype(jnp.float32)
+    v = pim_linear(p["w_v"], xv, cfg, trq).astype(jnp.float32)
+    g = pim_linear(p["w_g"], xg, cfg, trq)
+    # data-dependent decay (the Finch feature): w in (0,1), log w <= 0
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_lora_a"].astype(jnp.float32)
+                    ) @ p["decay_lora_b"].astype(jnp.float32)
+    logw = -jnp.exp(p["decay_w"] + lora)                # (B,S,da)
+
+    def to_heads(t):
+        return t.reshape(b, s, h, hs).transpose(0, 2, 1, 3)
+
+    r_, k_, v_, w_ = map(to_heads, (r, k, v, logw))
+    u = p["bonus_u"].reshape(h, hs)
+    s0 = cache["s"] if cache is not None else jnp.zeros((b, h, hs, hs),
+                                                        jnp.float32)
+
+    if s == 1 and cache is not None:
+        rr, kk, vv, ww = (t[:, :, 0] for t in (r_, k_, v_, w_))
+        out1 = jnp.einsum("bhk,bhkv->bhv", rr, s0) + \
+            jnp.einsum("bhk,bhk->bh", rr, u * kk)[..., None] * vv
+        s_end = jnp.exp(ww)[..., None] * s0 + kk[..., None] * vv[:, :, None]
+        wkv = out1[:, :, None, :]                        # (B,H,1,hs)
+    else:
+        chunk = min(cfg.rwkv_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            zf = ((0, 0), (0, 0), (0, pad), (0, 0))
+            r_, k_, v_ = (jnp.pad(t, zf) for t in (r_, k_, v_))
+            w_ = jnp.pad(w_, zf)                         # log w = 0 -> w = 1
+        wkv, s_end = wkv_scan(r_, k_, v_, w_, u, s0, chunk)
+        wkv = wkv[:, :, :s]
+
+    y = wkv.transpose(0, 2, 1, 3).reshape(b, s, h * hs)
+    # per-channel groupnorm-style normalization, then output gate
+    mu_y = jnp.mean(y.reshape(b, s, h, hs), -1, keepdims=True)
+    var_y = jnp.var(y.reshape(b, s, h, hs), -1, keepdims=True)
+    y = ((y.reshape(b, s, h, hs) - mu_y) * jax.lax.rsqrt(var_y + 1e-5)
+         ).reshape(b, s, h * hs)
+    y = y * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+    y = (y.astype(x.dtype) * jax.nn.silu(g))
+    out = pim_linear(p["w_o"], y, cfg, trq)
+    new_cache = ({"s": s_end, "x_prev": x[:, -1:]}
+                 if cache is not None else None)
+    return out, new_cache

@@ -1,0 +1,14 @@
+"""repro.pim — the ReRAM crossbar datapath substrate (ISAAC-style, paper §II).
+
+``crossbar``  bit-exact simulation of the sliced analog MVM datapath:
+              1-bit DAC input slices x 1-bit-cell weight columns, SAR-ADC
+              conversion of every bit-line partial sum, digital
+              shift-and-add merge (the oracle for the Pallas kernels).
+``mapping``   layer -> crossbar tiling, im2col for convolutions, and the
+              per-layer conversion counts the energy model consumes.
+"""
+from .crossbar import (PimConfig, bit_exact_mvm, fake_quant_mvm,
+                       collect_bl_samples, offset_encode, bitplanes)
+from .mapping import LayerMapping, map_linear, map_conv2d, conv2d_pim, im2col
+
+__all__ = [k for k in dir() if not k.startswith("_")]

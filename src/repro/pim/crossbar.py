@@ -1,0 +1,181 @@
+"""Bit-exact simulation of the ISAAC-style sliced crossbar datapath (§II-A).
+
+Datapath being modeled (Fig. 1 / Fig. 5):
+
+* int8 weights are offset-encoded to unsigned and stored as ``k_w`` 1-bit
+  cells on ``k_w`` adjacent bit-lines (R_cell = 1).
+* uint8 inputs are fed by 1-bit DACs as ``k_i`` bit-slices, cycle by cycle
+  (R_DA = 1).
+* Rows are partitioned into groups of ``xbar`` (= 128); each (input-slice,
+  weight-column, row-group) produces one analog bit-line partial sum in
+  ``[0, xbar]`` which the (TRQ-modified) SAR ADC digitizes — one A/D
+  *conversion* each.
+* The S+A module decodes the compact TRQ code and accumulates with the
+  ``<< (input_bit + weight_bit)`` significance; the offset-encoding
+  correction term is computed exactly in the digital domain.
+
+Everything is vectorized jnp: the b,j loops become tensor axes so the whole
+sim is a handful of matmuls — the same structure the Pallas kernel tiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trq import TRQParams, trq_quant, trq_ad_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class PimConfig:
+    xbar: int = 128          # crossbar rows (= columns) per array
+    k_w: int = 8             # weight bit-width (1-bit cells -> k_w columns)
+    k_i: int = 8             # input bit-width (1-bit DAC -> k_i slices)
+    r_adc: int = 8           # native ADC resolution
+    interpret: bool = True   # pallas interpret mode (CPU container)
+
+
+def offset_encode(w_int: jax.Array, k_w: int = 8) -> tuple[jax.Array, int]:
+    """Signed int weights -> unsigned cell conductances: u = w + 2**(k_w-1).
+
+    Returns (u, zero_point).  The MVM correction term
+    ``y = a @ w = a @ u - zp * sum(a)`` is applied digitally."""
+    zp = 2 ** (k_w - 1)
+    return (w_int.astype(jnp.int32) + zp), zp
+
+
+def bitplanes(x_uint: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """Unsigned integer tensor -> stacked 0/1 planes, LSB first."""
+    shifts = jnp.arange(bits, dtype=jnp.int32)
+    shifts = shifts.reshape((bits,) + (1,) * x_uint.ndim)
+    planes = (jnp.expand_dims(x_uint.astype(jnp.int32), 0) >> shifts) & 1
+    return jnp.moveaxis(planes, 0, axis)
+
+
+def _group(x: jax.Array, xbar: int, axis: int) -> jax.Array:
+    """Split a contraction axis into (groups, xbar), zero-padding the tail."""
+    k = x.shape[axis]
+    pad = (-k) % xbar
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    new_shape = x.shape[:axis] + (x.shape[axis] // xbar, xbar) + x.shape[axis + 1:]
+    return x.reshape(new_shape)
+
+
+def _bl_partial_sums(a_uint: jax.Array, u_uint: jax.Array, cfg: PimConfig):
+    """All analog bit-line partial sums of an MVM.
+
+    a_uint: (M, K) unsigned inputs;  u_uint: (K, N) unsigned (offset-encoded)
+    weights.  Returns int32 partials of shape (k_i, k_w, G, M, N) with values
+    in [0, xbar] — exactly what each ADC sees."""
+    a_b = bitplanes(a_uint, cfg.k_i)                   # (k_i, M, K)
+    u_b = bitplanes(u_uint, cfg.k_w)                   # (k_w, K, N)
+    a_g = _group(a_b, cfg.xbar, axis=2)                # (k_i, M, G, X)
+    u_g = _group(u_b, cfg.xbar, axis=1)                # (k_w, G, X, N)
+    # analog accumulation along each 128-row bit-line: contract X per group
+    p = jnp.einsum("imgx,jgxn->ijgmn",
+                   a_g.astype(jnp.float32), u_g.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    return p                                           # (k_i,k_w,G,M,N)
+
+
+def _shift_add(y_q: jax.Array, cfg: PimConfig) -> jax.Array:
+    """Digital S+A merge over input-slice and weight-column significance."""
+    bi = 2.0 ** jnp.arange(cfg.k_i, dtype=jnp.float32)
+    bj = 2.0 ** jnp.arange(cfg.k_w, dtype=jnp.float32)
+    return jnp.einsum("ijgmn,i,j->mn", y_q, bi, bj)
+
+
+def bit_exact_mvm(a_uint: jax.Array, w_int: jax.Array,
+                  trq: Optional[TRQParams], cfg: PimConfig = PimConfig(),
+                  with_ops: bool = False):
+    """Full sliced-datapath MVM with per-conversion (TRQ-)ADC quantization.
+
+    a_uint: (M, K) unsigned ints in [0, 2**k_i);  w_int: (K, N) signed ints
+    in [-2**(k_w-1), 2**(k_w-1)).  ``trq=None`` -> lossless (native R_ADC
+    covers [0, xbar]).  Returns float32 (M, N) integer-valued result, plus
+    total A/D operations when ``with_ops``.
+    """
+    u, zp = offset_encode(w_int, cfg.k_w)
+    p = _bl_partial_sums(a_uint, u, cfg)
+    if trq is None:
+        y_q, ops = p, jnp.full(p.shape, cfg.r_adc, jnp.int32)
+    else:
+        y_q, ops = trq_quant(p, trq), trq_ad_ops(p, trq)
+    acc = _shift_add(y_q, cfg)
+    corr = zp * jnp.sum(a_uint.astype(jnp.float32), axis=1, keepdims=True)
+    out = acc - corr
+    if with_ops:
+        # float32 accumulation: op totals feed energy *ratios*; int64 is
+        # unavailable without jax_enable_x64
+        return out, jnp.sum(ops.astype(jnp.float32))
+    return out
+
+
+def collect_bl_samples(a_uint: jax.Array, w_int: jax.Array,
+                       cfg: PimConfig = PimConfig()) -> jax.Array:
+    """Raw (pre-ADC) bit-line partial sums — the calibration samples ``y``
+    that Algorithm 1 and the Fig. 3a distribution analysis consume."""
+    u, _ = offset_encode(w_int, cfg.k_w)
+    return _bl_partial_sums(a_uint, u, cfg)
+
+
+def fake_quant_mvm(a: jax.Array, w: jax.Array, trq: TRQParams,
+                   a_scale, w_scale, cfg: PimConfig = PimConfig(),
+                   ste: bool = False, auto_range: bool = False):
+    """Fast per-group abstraction (paper §III-B: the quantizer *is* the
+    behavioral abstraction of A/D conversion at the BLs).
+
+    Instead of 1-bit slicing (k_i*k_w conversions per group), quantize the
+    full-precision per-128-row-group partial sum once with a signed TRQ.
+    This is the LM-scale integration path; it preserves the error *locality*
+    (per-BL-group) while being a single matmul per group.
+
+    Implementation: ``lax.scan`` over row groups so the live partial-sum
+    tensor is one (..., N) tile — never the unfused (..., G, N) blow-up
+    (that fusion is what the trq_group_mvm Pallas kernel does in VMEM on
+    real TPU hardware).
+
+    a: (..., K) float;  w: (K, N) float;  scales map partial sums onto the
+    ADC integer grid.  ``ste=True`` makes it differentiable (QAT-style).
+    """
+    a_g = _group(a, cfg.xbar, axis=a.ndim - 1)          # (..., G, X)
+    w_g = _group(w, cfg.xbar, axis=0)                   # (G, X, N)
+    a_g = jnp.moveaxis(a_g, -2, 0)                      # (G, ..., X)
+    grid = jnp.asarray(a_scale * w_scale, a.dtype)
+
+    if auto_range:
+        # uncalibrated layers: set delta_r1 so the coarse range
+        # 2^(n_r2+m)*delta_r1 covers the observed |psum| max (the fused
+        # kernel keeps a running max in VMEM and requantizes; the sim takes
+        # one extra reduction pass).  Calibrated layers (Algorithm 1) have
+        # exact registers and skip this.
+        def mx(c, gw):
+            ag, wg = gw
+            p = jnp.einsum("...x,xn->...n", ag, wg,
+                           preferred_element_type=jnp.float32)
+            return jnp.maximum(c, jnp.max(jnp.abs(p))), None
+        vmax, _ = jax.lax.scan(mx, jnp.float32(0.0), (a_g, w_g))
+        span = vmax / jnp.asarray(grid, jnp.float32)
+        reach = 2.0 ** (trq.n_r2 + trq.m)
+        scale = jnp.maximum(span / reach, 1e-6)
+        trq = trq.replace(delta_r1=trq.delta_r1 * scale)
+
+    def body(acc, gw):
+        ag, wg = gw
+        p = jnp.einsum("...x,xn->...n", ag, wg,
+                       preferred_element_type=jnp.float32)
+        q = (trq_quant(p / grid, trq) * grid).astype(a.dtype)
+        p = p.astype(a.dtype)
+        if ste:
+            q = p + jax.lax.stop_gradient(q - p)
+        return acc + q, None
+
+    out_shape = a.shape[:-1] + (w.shape[1],)
+    acc0 = jnp.zeros(out_shape, a.dtype)
+    acc, _ = jax.lax.scan(body, acc0, (a_g, w_g))
+    return acc

@@ -1,0 +1,100 @@
+"""Layer -> crossbar mapping (paper Fig. 1) and conversion accounting.
+
+Convolutions are lowered to MVMs via im2col over sliding windows; linear
+layers map directly.  A layer that does not fit one crossbar pair is
+partitioned over row groups (contraction dim) and column tiles (output dim);
+``LayerMapping`` records the tile counts the energy model needs (Eq. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trq import TRQParams
+from .crossbar import PimConfig, bit_exact_mvm, collect_bl_samples
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMapping:
+    name: str
+    in_features: int          # contraction length (rows before grouping)
+    out_features: int         # logical output columns
+    n_mvms: int               # MVMs per inference (tokens or conv positions)
+    row_groups: int
+    crossbars: int            # physical arrays used (row groups x col tiles)
+
+    @property
+    def conversions_per_inference(self) -> int:
+        # slices x weight-columns x row-groups x outputs x MVMs  (Eq. 4)
+        return 8 * 8 * self.row_groups * self.out_features * self.n_mvms
+
+
+def map_linear(name: str, in_features: int, out_features: int,
+               n_mvms: int = 1, cfg: PimConfig = PimConfig()) -> LayerMapping:
+    groups = math.ceil(in_features / cfg.xbar)
+    col_tiles = math.ceil(out_features * cfg.k_w / cfg.xbar)
+    return LayerMapping(name, in_features, out_features, n_mvms,
+                        groups, groups * col_tiles)
+
+
+def map_conv2d(name: str, c_in: int, c_out: int, k: int, h_out: int,
+               w_out: int, cfg: PimConfig = PimConfig()) -> LayerMapping:
+    return map_linear(name, c_in * k * k, c_out, n_mvms=h_out * w_out, cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# im2col convolution on the PIM datapath
+# ---------------------------------------------------------------------------
+
+def im2col(x: jax.Array, k: int, stride: int = 1, pad: int = 0,
+           pad_value=0) -> jax.Array:
+    """(B, H, W, C) -> (B, H', W', k*k*C) patches (NHWC).
+
+    ``pad_value`` is the activation zero-POINT, not numeric zero: with
+    asymmetric input quantization a real-valued 0 encodes as ``zp``, so the
+    borders must be padded with ``zp`` for the digital correction term to be
+    position-independent."""
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)),
+                    constant_values=pad_value)
+    b, h, w, c = x.shape
+    h_out = (h - k) // stride + 1
+    w_out = (w - k) // stride + 1
+    idx_h = stride * jnp.arange(h_out)
+    idx_w = stride * jnp.arange(w_out)
+    patches = []
+    for di in range(k):
+        for dj in range(k):
+            patches.append(x[:, idx_h[:, None] + di, idx_w[None, :] + dj, :])
+    return jnp.concatenate(patches, axis=-1).reshape(b, h_out, w_out, k * k * c)
+
+
+def conv2d_pim(x_uint: jax.Array, w_int: jax.Array, trq: Optional[TRQParams],
+               stride: int = 1, pad: int = 0, pad_value=0,
+               cfg: PimConfig = PimConfig(), with_ops: bool = False):
+    """Quantized conv on the bit-exact crossbar sim.
+
+    x_uint: (B, H, W, C) unsigned ints;  w_int: (k, k, C, C_out) signed ints.
+    """
+    k = w_int.shape[0]
+    cols = im2col(x_uint, k, stride, pad, pad_value)
+    b, ho, wo, kk = cols.shape
+    w2 = w_int.reshape(-1, w_int.shape[-1])
+    out = bit_exact_mvm(cols.reshape(-1, kk), w2, trq, cfg, with_ops=with_ops)
+    if with_ops:
+        out, ops = out
+        return out.reshape(b, ho, wo, -1), ops
+    return out.reshape(b, ho, wo, -1)
+
+
+def conv2d_bl_samples(x_uint: jax.Array, w_int: jax.Array, stride: int = 1,
+                      pad: int = 0, pad_value=0,
+                      cfg: PimConfig = PimConfig()) -> jax.Array:
+    k = w_int.shape[0]
+    cols = im2col(x_uint, k, stride, pad, pad_value)
+    w2 = w_int.reshape(-1, w_int.shape[-1])
+    return collect_bl_samples(cols.reshape(-1, cols.shape[-1]), w2, cfg)

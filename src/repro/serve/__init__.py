@@ -1,0 +1,2 @@
+from .engine import ServeEngine, Request
+from .kvcache import cache_pspecs

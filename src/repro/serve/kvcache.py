@@ -1,0 +1,91 @@
+"""KV/SSM cache sharding policy.
+
+Standard decode (batch >= data axis): batch -> ('pod','data'), and the KV
+head dim -> 'model' when divisible, else the head_dim -> 'model' (splitting
+head_dim makes the score/value einsums partial-sum over 'model' — two small
+all-reduces per layer, but a full 16-way cache split even for kv_heads < 16).
+
+Long-context decode (batch=1): the cache *sequence* dim -> 'data'
+(sequence-parallel cache); XLA lowers the softmax reductions to the
+flash-decode combine across 'data'.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes if a in mesh.axis_names]))
+
+
+def kv_pspec(mesh: Mesh, cfg: ModelConfig, batch: int, stacked: bool = True):
+    """PartitionSpec for a (B, S, KV, hd) cache leaf (+ leading layer-stack
+    dim when ``stacked``)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = "model" if "model" in mesh.axis_names else None
+    n_dp = _axis_size(mesh, dp)
+    n_m = mesh.shape[model] if model else 1
+
+    batch_ok = batch % n_dp == 0 if n_dp > 1 else True
+    if batch_ok and batch >= n_dp:
+        b_ax, s_ax = dp, None
+    else:
+        b_ax, s_ax = None, ("data" if "data" in mesh.axis_names else None)
+
+    if model and cfg.n_kv_heads % n_m == 0:
+        kv_ax, hd_ax = model, None
+    elif model and cfg.hd % n_m == 0:
+        kv_ax, hd_ax = None, model
+    else:
+        kv_ax, hd_ax = None, None
+    spec = (b_ax, s_ax, kv_ax, hd_ax)
+    return P(*((None,) + spec)) if stacked else P(*spec)
+
+
+def cache_pspecs(mesh: Mesh, cfg: ModelConfig, cache, batch: int):
+    """Pytree of NamedShardings matching an init_cache(...) pytree."""
+    kv = kv_pspec(mesh, cfg, batch)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b_ax = dp if (batch % max(_axis_size(mesh, dp), 1) == 0 and batch >= _axis_size(mesh, dp)) else None
+    model = "model" if "model" in mesh.axis_names else None
+
+    def visit(path, leaf):
+        names = [str(getattr(k, "key", k)) for k in path]
+        leaf_name = names[-1]
+        nd = leaf.ndim
+        if leaf_name in ("k", "v"):
+            return NamedSharding(mesh, kv if nd == 5 else
+                                 P(*kv[1:]) if nd == 4 else P())
+        if leaf_name == "len":
+            return NamedSharding(mesh, P(None, b_ax) if nd == 2 else P(b_ax))
+        if leaf_name == "len0":
+            return NamedSharding(mesh, P(b_ax))
+        if leaf_name == "h":          # mamba state (P?, B, di, ds)
+            spec = [None] * nd
+            spec[-3] = b_ax
+            spec[-2] = model if True else None
+            return NamedSharding(mesh, P(*spec))
+        if leaf_name == "conv":       # (P?, B, dc-1, di)
+            spec = [None] * nd
+            spec[-3] = b_ax
+            spec[-1] = model
+            return NamedSharding(mesh, P(*spec))
+        if leaf_name == "s":          # rwkv state (P?, B, H, hs, hs)
+            spec = [None] * nd
+            spec[-4] = b_ax
+            spec[-3] = model
+            return NamedSharding(mesh, P(*spec))
+        if leaf_name == "x_prev":
+            spec = [None] * nd
+            spec[-3] = b_ax
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+import jax  # noqa: E402  (bottom import keeps jax state untouched on module scan)

@@ -1,0 +1,5 @@
+from .hlo import collective_bytes, parse_shape_bytes
+from .roofline import RooflineReport, roofline, V5E
+
+__all__ = ["collective_bytes", "parse_shape_bytes", "RooflineReport",
+           "roofline", "V5E"]

@@ -1,0 +1,97 @@
+"""HLO text analysis: collective-traffic extraction.
+
+``compiled.as_text()`` of an SPMD-partitioned executable contains the
+post-partitioning module, so every collective is explicit and every shape is
+the *per-device* shape.  We sum output-operand bytes per collective kind;
+multiplied by the device count this is the global collective traffic
+(every device sources its shard), which is the ``collective_bytes``
+consumed by the roofline formula.
+
+Loops: HLO embeds ``while`` bodies once — callers that scan over layers must
+scale body terms by trip count (see launch/dryrun.py depth-differencing).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape token or tuple of tokens."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# `%name = <shape or (tuple)> <op>(` — e.g.
+#   %all-reduce.7 = f32[512,1024]{1,0} all-reduce(%x), replica_groups=...
+#   %ag = (bf16[8,128]{1,0}, bf16[8,128]{1,0}) all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind and total collective bytes (per-device view).
+
+    ``-start``/``-done`` pairs of async collectives are counted once (on
+    start).  Returns {kind: bytes, ..., 'total': bytes, 'count': n_ops}.
+    """
+    out: dict = defaultdict(int)
+    count = 0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        b = parse_shape_bytes(shape_str)
+        out[kind] += b
+        count += 1
+    out["total"] = sum(out[k] for k in COLLECTIVE_KINDS if k in out)
+    out["count"] = count
+    return dict(out)
+
+
+def collective_bytes_in_loops(hlo_text: str) -> dict:
+    """Split collective bytes into (top-level, inside-while-body) buckets so
+    loop bodies can be scaled by trip count.  HLO computations are separated
+    by blank-line-delimited ``%name (args) -> shape {`` blocks; while bodies
+    are computations referenced by ``while(...)``, body=%name."""
+    bodies = set(re.findall(r"body=%?([\w\.\-]+)", hlo_text))
+    conds = set(re.findall(r"condition=%?([\w\.\-]+)", hlo_text))
+    in_loop: dict = defaultdict(int)
+    outside: dict = defaultdict(int)
+    current = None
+    for line in hlo_text.splitlines():
+        mdef = re.match(r"\s*%?([\w\.\-]+)\s*\([^)]*\)\s*->", line)
+        if mdef and "{" in line:
+            current = mdef.group(1)
+        m = _OP_RE.search(line)
+        if not m or m.group(3) == "-done":
+            continue
+        b = parse_shape_bytes(m.group(1))
+        bucket = in_loop if current in bodies | conds else outside
+        bucket[m.group(2)] += b
+    return {"in_loop": dict(in_loop), "outside": dict(outside)}

@@ -1,0 +1,205 @@
+"""Roofline-term derivation (task §ROOFLINE ANALYSIS).
+
+Per (arch × shape × mesh) the dry-run supplies:
+  * HLO_FLOPs and HLO_bytes       — loop-corrected ``cost_analysis`` sums
+  * collective_bytes (global)     — per-device HLO collective bytes × chips
+
+Terms (seconds for one step, the whole mesh advancing together):
+  compute    = HLO_FLOPs      / (chips × peak_FLOP/s)
+  memory     = HLO_bytes      / (chips × HBM_bw)
+  collective = collective_b   / (chips × link_bw)
+
+HLO_FLOPs/bytes from ``cost_analysis`` are *global* (the unpartitioned
+module's totals); collective bytes are parsed from the partitioned module
+(per-device) and scaled by the chip count, so all three numerators are
+global quantities and the denominators carry the per-chip rates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops: float        # FLOP/s per chip (bf16)
+    hbm_bw: float            # bytes/s per chip
+    link_bw: float           # bytes/s per ICI link
+    hbm_bytes: float         # HBM capacity per chip
+
+
+# TPU v5e (task-given constants)
+V5E = HwSpec(name="tpu-v5e",
+             peak_flops=197e12,
+             hbm_bw=819e9,
+             link_bw=50e9,
+             hbm_bytes=16e9)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float       # global
+    model_flops: float            # 6·N·D (dense) / 6·N_active·D (MoE)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    bytes_per_device: float = 0.0  # from memory_analysis (arg+out+temp)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time = max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the compute roofline achieved if the step ran at the
+        dominant term: MODEL_FLOPS / (chips·peak) / step_s."""
+        if self.step_s <= 0:
+            return 0.0
+        ideal = self.model_flops / (self.chips * V5E.peak_flops)
+        return ideal / self.step_s
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_tflops": self.hlo_flops / 1e12,
+            "hlo_gbytes": self.hlo_bytes / 1e9,
+            "coll_gbytes": self.collective_bytes / 1e9,
+            "model_tflops": self.model_flops / 1e12,
+            "compute_ms": self.compute_s * 1e3,
+            "memory_ms": self.memory_s * 1e3,
+            "collective_ms": self.collective_s * 1e3,
+            "bottleneck": self.bottleneck,
+            "useful_flop_frac": self.useful_flop_frac,
+            "roofline_frac": self.roofline_frac,
+            "bytes_per_dev_gb": self.bytes_per_device / 1e9,
+        }
+
+
+def roofline(arch: str, shape: str, mesh: str, chips: int,
+             hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+             model_flops: float, bytes_per_device: float = 0.0,
+             hw: HwSpec = V5E) -> RooflineReport:
+    r = RooflineReport(arch=arch, shape=shape, mesh=mesh, chips=chips,
+                       hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+                       collective_bytes=collective_bytes,
+                       model_flops=model_flops,
+                       bytes_per_device=bytes_per_device)
+    r.compute_s = hlo_flops / (chips * hw.peak_flops)
+    r.memory_s = hlo_bytes / (chips * hw.hbm_bw)
+    r.collective_s = collective_bytes / (chips * hw.link_bw)
+    terms = {"compute": r.compute_s, "memory": r.memory_s,
+             "collective": r.collective_s}
+    r.bottleneck = max(terms, key=terms.get)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS — 6·N·D (train), 2·N·D (inference) with MoE active-param N
+# ---------------------------------------------------------------------------
+
+def count_params(cfg, active_only: bool = False) -> float:
+    """Analytic parameter count from a ModelConfig (matches init_lm)."""
+    d, v = cfg.d_model, cfg.vocab_size
+    hd = cfg.hd
+    emb = v * d
+    head = 0 if cfg.tie_embeddings else d * v
+    total = emb + head
+
+    def attn_params():
+        return d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd \
+            + cfg.n_heads * hd * d
+
+    def mlp_params(dff):
+        mult = 3 if cfg.mlp_act == "silu" else 2
+        return mult * d * dff
+
+    def moe_params(active):
+        e = cfg.experts_per_token if active else cfg.n_experts
+        dff = cfg.moe_d_ff or cfg.d_ff
+        return e * 3 * d * dff + d * cfg.n_experts
+
+    def mamba_params():
+        di = d * cfg.ssm_expand
+        return d * 2 * di + di * d + di * cfg.ssm_d_conv \
+            + di * (cfg.ssm_d_state * 2 + 2) + 2 * di
+
+    def rwkv_params():
+        return 4 * d * d + d * d + 2 * d + 64 * d * 2
+
+    for i in range(cfg.period):
+        mixer, ffn = cfg.layer_kind(i)
+        layer = 0
+        if mixer == "attn":
+            layer += attn_params()
+        elif mixer == "mamba":
+            layer += mamba_params()
+        else:
+            layer += rwkv_params()
+        if ffn in ("mlp", "moe+mlp"):
+            layer += mlp_params(cfg.d_ff)
+        if ffn in ("moe", "moe+mlp"):
+            layer += moe_params(active_only)
+        total += layer * cfg.n_periods
+
+    if cfg.encoder_layers:
+        total += cfg.encoder_layers * (attn_params() + mlp_params(cfg.d_ff))
+        total += cfg.n_layers * attn_params()      # decoder cross-attention
+    return float(total)
+
+
+def _mixer_flops_per_token(cfg, s: int, causal: bool = True) -> float:
+    """Forward token-mixing FLOPs per token beyond the parameter matmuls.
+
+    attention: 2·S·H·hd (QKᵀ) + 2·S·H·hd (PV), halved when causal.
+    mamba:     ~9 ops over (di, ds) selective-scan state updates.
+    rwkv6:     ~6 ops over (H, hs, hs) state outer-products = 6·d·hs.
+    """
+    per_layer = {}
+    hd = cfg.hd
+    attn = 4.0 * s * cfg.n_heads * hd * (0.5 if causal else 1.0)
+    di = cfg.d_model * cfg.ssm_expand
+    mamba = 9.0 * di * cfg.ssm_d_state
+    rwkv = 6.0 * cfg.d_model * cfg.rwkv_head_size
+    total = 0.0
+    for i in range(cfg.period):
+        mixer, _ = cfg.layer_kind(i)
+        total += {"attn": attn, "mamba": mamba, "rwkv": rwkv}[mixer]
+    total *= cfg.n_periods
+    if cfg.encoder_layers:
+        total += cfg.encoder_layers * 4.0 * s * cfg.n_heads * hd   # bidir enc
+        total += cfg.n_layers * 4.0 * s * cfg.n_heads * hd * 0.5   # cross+self
+    return total
+
+
+def model_flops(cfg, shape, mode: Optional[str] = None) -> float:
+    """Useful-work FLOPs for one step (PaLM-style MFU accounting):
+    6·N_active·D + 3·mixer terms for training; 2·N_active·D + mixer for
+    prefill; per-token decode reads the whole cache once."""
+    n_active = count_params(cfg, active_only=True)
+    mode = mode or shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    if mode == "train":
+        tokens = b * s
+        return 6.0 * n_active * tokens + 3.0 * tokens * \
+            _mixer_flops_per_token(cfg, s)
+    if mode == "prefill":
+        tokens = b * s
+        return 2.0 * n_active * tokens + tokens * \
+            _mixer_flops_per_token(cfg, s)
+    # decode: one token/sequence; attention reads the S-deep cache
+    return 2.0 * n_active * b + b * _mixer_flops_per_token(cfg, s)

@@ -1,0 +1,2 @@
+from .optimizer import make_optimizer, lr_schedule
+from .loop import make_train_step, Trainer

@@ -1,0 +1,152 @@
+"""Training loop: loss, gradient accumulation, sharded train_step builder,
+and a Trainer with fault tolerance (atomic checkpoints + exact resume) and
+straggler monitoring.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.dist.sharding import use_mesh, shard, param_pspecs, zero1_upgrade
+from .optimizer import lr_schedule, make_optimizer
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array, aux) -> jax.Array:
+    """Token-mean cross entropy (f32) + MoE aux loss.
+
+    Vocab-parallel form (EXPERIMENTS.md §Perf iter 1): the gold logit is a
+    masked reduction instead of ``take_along_axis`` — a cross-shard dynamic
+    gather that forced GSPMD to all-gather the full (B,S,V) logits.  Both
+    reductions below contract the vocab-sharded axis, so the only
+    collectives are (B,S)-sized all-reduces (Megatron-style vocab-parallel
+    CE) and per-device live logits stay at (B/dp, S, V/tp)."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), -1)
+    ce = jnp.mean(logz - gold)
+    return ce + AUX_LOSS_WEIGHT * aux
+
+
+def make_train_step(apply_fn, cfg: ModelConfig, tc: TrainConfig):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics).  Pure: jit/pjit it at the call site."""
+    opt_init, opt_update = make_optimizer(tc)
+    lr_fn = lr_schedule(tc)
+
+    def loss_fn(params, batch):
+        logits, _, aux = apply_fn(params, batch, cache=None, mode="train")
+        return lm_loss(logits, batch["labels"], aux)
+
+    def grads_of(params, batch):
+        if tc.microbatch and tc.microbatch < batch["tokens"].shape[0]:
+            nb = batch["tokens"].shape[0] // tc.microbatch
+            micro = jax.tree.map(
+                lambda t: t.reshape(nb, tc.microbatch, *t.shape[1:]), batch)
+
+            def acc_fn(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_acc + loss / nb,
+                        jax.tree.map(lambda a, b: a + b / nb, g_acc, g)), None
+
+            zero_g = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0), zero_g),
+                                            micro)
+            return loss, grads
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(params, opt_state, batch, step):
+        loss, grads = grads_of(params, batch)
+        lr = lr_fn(step)
+        params, opt_state, gnorm = opt_update(grads, opt_state, params, lr)
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step, opt_init
+
+
+def shardings_for(mesh, params, opt_state, tc: TrainConfig,
+                  moe_ffn_shard_data: bool = False):
+    """NamedShardings for params and optimizer state (ZeRO-1 upgraded)."""
+    from jax.sharding import NamedSharding
+
+    pspecs = param_pspecs(params, moe_ffn_shard_data)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    def opt_spec(path_spec, leaf):
+        spec = path_spec
+        if tc.zero1:
+            spec = zero1_upgrade(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    def build(moments):
+        def visit(spec, leaf):
+            if isinstance(leaf, dict):                 # factored v (row/col)
+                rank = leaf["row"].ndim + 1
+                parts = list(spec) + [None] * (rank - len(spec))
+                from jax.sharding import PartitionSpec as P
+                row = P(*parts[:-1])                      # mean over last dim
+                col = P(*(parts[:-2] + parts[-1:]))       # mean over dim -2
+                return {"row": opt_spec(row, leaf["row"]),
+                        "col": opt_spec(col, leaf["col"])}
+            return opt_spec(spec, leaf)
+        return jax.tree.map(visit, pspecs, moments,
+                            is_leaf=lambda x: isinstance(x, dict) and "row" in x)
+
+    o_sh = {"step": NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            "m": build(opt_state["m"]), "v": build(opt_state["v"])}
+    return p_sh, o_sh
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Host-side loop: watchdog (straggler flagging), periodic async
+    checkpoints, exact resume (stateless data pipeline)."""
+    train_step: Callable
+    batch_at: Callable[[int], dict]
+    tc: TrainConfig
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+
+    def run(self, params, opt_state, start_step: int = 0,
+            num_steps: Optional[int] = None, on_metrics=None):
+        from repro.ckpt.checkpoint import save_async
+        num_steps = num_steps or self.tc.total_steps
+        step_times: list[float] = []
+        stragglers = []
+        history = []
+        for step in range(start_step, num_steps):
+            t0 = time.perf_counter()
+            batch = self.batch_at(step)
+            params, opt_state, metrics = self.train_step(
+                params, opt_state, batch, step)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            step_times.append(dt)
+            med = float(np.median(step_times[-50:]))
+            if len(step_times) > 5 and dt > self.tc.watchdog_factor * med:
+                stragglers.append((step, dt, med))
+            if step % self.log_every == 0 or step == num_steps - 1:
+                row = {k: float(v) for k, v in metrics.items()}
+                row["step"] = step
+                row["step_time_s"] = dt
+                history.append(row)
+                if on_metrics:
+                    on_metrics(row)
+            if self.ckpt_dir and self.tc.checkpoint_every and \
+                    (step + 1) % self.tc.checkpoint_every == 0:
+                save_async(self.ckpt_dir, step + 1,
+                           {"params": params, "opt": opt_state})
+        return params, opt_state, {"history": history,
+                                   "stragglers": stragglers,
+                                   "median_step_s": float(np.median(step_times))}

@@ -1,0 +1,105 @@
+"""AdamW with large-scale options (pure JAX, no optax):
+
+* ``optimizer_dtype='bfloat16'`` — bf16 first/second moments (halves
+  optimizer HBM; the update math runs in f32).
+* ``factored_second_moment``     — Adafactor-style row/col-factored v for
+  >=2D tensors (O(r+c) instead of O(r*c)); required to fit the 480B MoE's
+  optimizer state on a single pod (DESIGN.md §6).
+* ZeRO-1 sharding is applied OUTSIDE this module: the train-step jit gives
+  optimizer-state leaves a 'data'-upgraded sharding
+  (dist.sharding.zero1_upgrade), and XLA places the reduce-scatter /
+  all-gather pair around the elementwise update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_schedule(tc: TrainConfig):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - tc.warmup_steps) /
+                        jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+    return lr
+
+
+def _moment_dtype(tc: TrainConfig):
+    return jnp.bfloat16 if tc.optimizer_dtype == "bfloat16" else jnp.float32
+
+
+def _factored(leaf) -> bool:
+    return leaf.ndim >= 2 and leaf.shape[-1] >= 8 and leaf.shape[-2] >= 8
+
+
+def make_optimizer(tc: TrainConfig):
+    mdt = _moment_dtype(tc)
+
+    def init(params):
+        def init_m(p):
+            return jnp.zeros_like(p, dtype=mdt)
+
+        def init_v(p):
+            if tc.factored_second_moment and _factored(p):
+                return {"row": jnp.zeros(p.shape[:-1], mdt),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], mdt)}
+            return jnp.zeros_like(p, dtype=mdt)
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(init_m, params),
+                "v": jax.tree.map(init_v, params)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        b1, b2 = tc.beta1, tc.beta2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        # global-norm clip in f32
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+            if tc.grad_clip > 0 else 1.0
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            if isinstance(v, dict):                     # factored second moment
+                g2 = jnp.square(g) + 1e-30
+                vr = b2 * v["row"].astype(jnp.float32) + (1 - b2) * g2.mean(-1)
+                vc = b2 * v["col"].astype(jnp.float32) + (1 - b2) * g2.mean(-2)
+                v_hat = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30))
+                v_new = {"row": vr.astype(mdt), "col": vc.astype(mdt)}
+            else:
+                v_hat = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+                v_new = v_hat.astype(mdt)
+            v_hat_b = v_hat / c2
+            upd_ = (m_new / c1) / (jnp.sqrt(v_hat_b) + tc.eps)
+            if p.ndim >= 2:                             # decoupled weight decay
+                upd_ = upd_ + tc.weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+            return p_new, m_new.astype(mdt), v_new
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        new_state = {"step": step, "m": new_m, "v": new_v}
+        return new_p, new_state, gnorm
+
+    return init, update

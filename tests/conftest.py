@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS override here — smoke tests and
+benches must see the host's single device; only launch/dryrun.py forces the
+512-device placeholder topology (task spec)."""
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

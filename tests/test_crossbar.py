@@ -1,0 +1,105 @@
+"""Bit-exact crossbar datapath sim tests (paper §II-A / Fig. 1 mapping)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trq import make_params
+from repro.pim.crossbar import (PimConfig, bit_exact_mvm, bitplanes,
+                                collect_bl_samples, fake_quant_mvm,
+                                offset_encode)
+
+
+def _rand_mvm(rng, m, k, n, k_i=8, k_w=8):
+    a = rng.integers(0, 2 ** k_i, (m, k)).astype(np.int32)
+    w = rng.integers(-2 ** (k_w - 1), 2 ** (k_w - 1), (k, n)).astype(np.int32)
+    return a, w
+
+
+def test_offset_encode_roundtrip(rng):
+    w = rng.integers(-128, 128, (64, 8)).astype(np.int32)
+    u, zp = offset_encode(jnp.asarray(w), 8)
+    assert zp == 128
+    assert int(jnp.min(u)) >= 0 and int(jnp.max(u)) < 256
+    np.testing.assert_array_equal(np.asarray(u) - zp, w)
+
+
+def test_bitplanes_reconstruct(rng):
+    x = rng.integers(0, 256, (16, 8)).astype(np.int32)
+    planes = bitplanes(jnp.asarray(x), 8, axis=0)
+    recon = sum((np.asarray(planes[b]) << b) for b in range(8))
+    np.testing.assert_array_equal(recon, x)
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 64, 8), (8, 128, 16), (3, 300, 5)])
+def test_bit_exact_lossless_equals_int_matmul(rng, m, k, n):
+    """Native-resolution ADC (no TRQ) -> exact integer MVM, any K padding."""
+    a, w = _rand_mvm(rng, m, k, n)
+    y = bit_exact_mvm(jnp.asarray(a), jnp.asarray(w), None)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  a.astype(np.int64) @ w.astype(np.int64))
+
+
+def test_bl_partial_sums_range(rng):
+    """Every analog BL sum must lie in [0, xbar] — what the ADC physically
+    sees (1-bit cells, 1-bit DAC, 128 rows)."""
+    a, w = _rand_mvm(rng, 4, 256, 8)
+    p = collect_bl_samples(jnp.asarray(a), jnp.asarray(w))
+    assert float(p.min()) >= 0.0
+    assert float(p.max()) <= 128.0
+    assert p.shape == (8, 8, 2, 4, 8)             # (k_i, k_w, G, M, N)
+
+
+def test_bit_exact_with_trq_is_bounded_error(rng):
+    """8b-resolution TRQ (lossless R1 covering [0,128]) == exact; tighter
+    R1 gives bounded error."""
+    a, w = _rand_mvm(rng, 4, 128, 8)
+    exact = a.astype(np.int64) @ w.astype(np.int64)
+    # r_ideal for 128-row BL sums is 8 bits (values 0..128)
+    p = make_params(delta_r1=1.0, n_r1=8, n_r2=8, m=0)
+    y = bit_exact_mvm(jnp.asarray(a), jnp.asarray(w), p)
+    np.testing.assert_array_equal(np.asarray(y), exact)
+
+
+def test_bit_exact_op_counting(rng):
+    a, w = _rand_mvm(rng, 2, 128, 4)
+    p = make_params(delta_r1=1.0, n_r1=4, n_r2=8, m=0, nu=1)
+    _, ops = bit_exact_mvm(jnp.asarray(a), jnp.asarray(w), p, with_ops=True)
+    n_conversions = 8 * 8 * 1 * 2 * 4             # k_i*k_w*G*M*N
+    assert n_conversions * 5 <= float(ops) <= n_conversions * 9
+
+
+def test_fake_quant_losslessness_at_high_bits(rng):
+    """Per-group TRQ with a fine grid AND a range covering the partial sums
+    is ~identity (16-bit range 2^16*0.005 = 328 >> |psum| ~ 40)."""
+    a = rng.normal(0, 1, (6, 256)).astype(np.float32)
+    w = rng.normal(0, 1, (256, 10)).astype(np.float32)
+    p = make_params(delta_r1=1.0, n_r1=16, n_r2=16, m=0, signed=True)
+    y = fake_quant_mvm(jnp.asarray(a), jnp.asarray(w), p, 0.005, 1.0)
+    np.testing.assert_allclose(np.asarray(y), a @ w, rtol=5e-3, atol=1e-2)
+
+
+def test_fake_quant_group_locality(rng):
+    """Quantization error is per-128-row group: splitting K in two halves
+    and summing their independent fake-quant MVMs equals the fused call."""
+    a = rng.normal(0, 1, (4, 256)).astype(np.float32)
+    w = rng.normal(0, 1, (256, 6)).astype(np.float32)
+    p = make_params(delta_r1=1.0, n_r1=4, n_r2=6, m=2, signed=True)
+    full = fake_quant_mvm(jnp.asarray(a), jnp.asarray(w), p, 0.05, 1.0)
+    h1 = fake_quant_mvm(jnp.asarray(a[:, :128]), jnp.asarray(w[:128]), p,
+                        0.05, 1.0)
+    h2 = fake_quant_mvm(jnp.asarray(a[:, 128:]), jnp.asarray(w[128:]), p,
+                        0.05, 1.0)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(h1 + h2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 4), st.integers(1, 3))
+@settings(max_examples=20, deadline=None)
+def test_bit_exact_property_small(mm, nn):
+    rng = np.random.default_rng(mm * 7 + nn)
+    a, w = _rand_mvm(rng, mm, 64, nn, k_i=4, k_w=4)
+    cfg = PimConfig(k_w=4, k_i=4)
+    y = bit_exact_mvm(jnp.asarray(a), jnp.asarray(w), None, cfg)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  a.astype(np.int64) @ w.astype(np.int64))

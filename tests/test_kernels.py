@@ -1,0 +1,131 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp ref oracles,
+swept over shapes and parameter regimes (task deliverable (c))."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.trq import make_params, trq_ad_ops, trq_quant
+from repro.kernels import (trq_group_mvm_pallas, trq_quant_pallas,
+                           xbar_mvm_pallas)
+from repro.kernels.trq_quant import ref as trq_quant_ref
+from repro.kernels.trq_group_mvm import ref as group_ref
+from repro.kernels.xbar_mvm import ref as xbar_ref
+from repro.pim.crossbar import bit_exact_mvm, fake_quant_mvm
+
+PARAM_GRID = [
+    dict(n_r1=4, n_r2=4, m=3, bias=0.0),
+    dict(n_r1=2, n_r2=6, m=1, bias=0.0),
+    dict(n_r1=3, n_r2=5, m=4, bias=3.0),
+    dict(n_r1=7, n_r2=7, m=0, bias=0.0),
+]
+
+
+# ---------------------------------------------------------------------------
+# trq_quant kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8,), (100, 130), (3, 5, 7), (256, 256),
+                                   (1, 1)])
+@pytest.mark.parametrize("pk", PARAM_GRID[:2])
+def test_trq_quant_kernel_matches_core(rng, shape, pk):
+    p = make_params(delta_r1=1.0, signed=True, **pk)
+    x = jnp.asarray(rng.normal(0, 30, shape).astype(np.float32))
+    q_ref, ops_ref = trq_quant(x, p), trq_ad_ops(x, p)
+    q, ops = trq_quant_pallas(x, p, interpret=True)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q_ref), atol=0)
+    np.testing.assert_array_equal(np.asarray(ops), np.asarray(ops_ref))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_trq_quant_kernel_dtypes(rng, dtype):
+    p = make_params(delta_r1=1.0, n_r1=4, n_r2=4, m=3, signed=True)
+    x = jnp.asarray(rng.normal(0, 30, (64, 64)).astype(dtype))
+    q, _ = trq_quant_pallas(x, p, interpret=True)
+    q_ref = trq_quant(x.astype(jnp.float32), p)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q_ref), atol=1e-3)
+
+
+def test_trq_quant_ref_oracle_self_consistency(rng):
+    p = make_params(delta_r1=1.0, n_r1=4, n_r2=5, m=2, signed=True)
+    x = jnp.asarray(rng.normal(0, 20, (32, 32)).astype(np.float32))
+    q_ref, ops_ref = trq_quant_ref.trq_quant_ref(x, p)
+    np.testing.assert_allclose(np.asarray(q_ref), np.asarray(trq_quant(x, p)))
+    np.testing.assert_array_equal(np.asarray(ops_ref),
+                                  np.asarray(trq_ad_ops(x, p)))
+
+
+# ---------------------------------------------------------------------------
+# trq_group_mvm kernel (the deployable LM-scale fused path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(100, 300, 130), (128, 128, 128),
+                                   (1, 256, 64), (64, 512, 8)])
+def test_group_mvm_kernel_matches_sim(rng, m, k, n):
+    p = make_params(delta_r1=1.0, n_r1=4, n_r2=4, m=3, signed=True)
+    a = jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (k, n)).astype(np.float32))
+    got = trq_group_mvm_pallas(a, w, p, 0.05, 1.0, interpret=True)
+    want = fake_quant_mvm(a, w, p, 0.05, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_group_mvm_kernel_batched_lead_dims(rng):
+    p = make_params(delta_r1=1.0, n_r1=4, n_r2=6, m=2, signed=True)
+    a = jnp.asarray(rng.normal(0, 1, (2, 3, 256)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (256, 32)).astype(np.float32))
+    got = trq_group_mvm_pallas(a, w, p, 0.05, 1.0, interpret=True)
+    want = fake_quant_mvm(a, w, p, 0.05, 1.0)
+    assert got.shape == (2, 3, 32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("pk", PARAM_GRID)
+def test_group_mvm_param_sweep(rng, pk):
+    p = make_params(delta_r1=1.0, signed=True, **pk)
+    a = jnp.asarray(rng.normal(0, 1, (32, 384)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (384, 48)).astype(np.float32))
+    got = trq_group_mvm_pallas(a, w, p, 0.1, 1.0, interpret=True)
+    want = group_ref.trq_group_mvm_ref(a, w, p, 0.1, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# xbar_mvm kernel (bit-exact sliced datapath)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(8, 128, 16), (4, 256, 8), (3, 100, 5)])
+def test_xbar_kernel_matches_bit_exact_sim(rng, m, k, n):
+    a = rng.integers(0, 256, (m, k)).astype(np.int32)
+    w = rng.integers(-128, 128, (k, n)).astype(np.int32)
+    p = make_params(delta_r1=1.0, n_r1=4, n_r2=6, m=2)
+    got, ops = xbar_mvm_pallas(jnp.asarray(a), jnp.asarray(w), p,
+                               interpret=True)
+    want, ops_want = bit_exact_mvm(jnp.asarray(a), jnp.asarray(w), p,
+                                   with_ops=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+    assert float(jnp.sum(ops)) == pytest.approx(float(ops_want))
+
+
+def test_xbar_kernel_lossless_mode(rng):
+    a = rng.integers(0, 256, (4, 128)).astype(np.int32)
+    w = rng.integers(-128, 128, (128, 8)).astype(np.int32)
+    got, ops = xbar_mvm_pallas(jnp.asarray(a), jnp.asarray(w), None,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  a.astype(np.int64) @ w.astype(np.int64))
+    # lossless = full 8-op conversions everywhere
+    assert float(ops.min()) == 8.0 * 8 * 8        # per-output: k_i*k_w*G ops
+
+
+def test_xbar_ref_oracle(rng):
+    from repro.pim.crossbar import PimConfig
+    a = rng.integers(0, 16, (4, 64)).astype(np.int32)
+    w = rng.integers(-8, 8, (64, 4)).astype(np.int32)
+    p = make_params(delta_r1=1.0, n_r1=3, n_r2=5, m=1)
+    cfg = PimConfig(k_i=4, k_w=4)
+    got, _ = xbar_ref.xbar_mvm_ref(jnp.asarray(a), jnp.asarray(w), p, cfg)
+    want = bit_exact_mvm(jnp.asarray(a), jnp.asarray(w), p, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)

@@ -1,0 +1,212 @@
+"""Training-loop, optimizer, checkpoint/fault-tolerance, and data tests."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.ckpt.checkpoint import (latest_step, restore, save, save_async,
+                                   wait_pending)
+from repro.data.synthetic import TokenStream, vision_dataset
+from repro.models.registry import build_model, get_config
+from repro.train.loop import Trainer, make_train_step
+from repro.train.optimizer import lr_schedule, make_optimizer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_setup(arch="llama3.2-3b", **tc_kw):
+    cfg = get_config(arch, smoke=True)
+    tc = TrainConfig(total_steps=20, warmup_steps=2, checkpoint_every=0,
+                     **tc_kw)
+    init_fn, apply_fn, _ = build_model(cfg)
+    train_step, opt_init = make_train_step(apply_fn, cfg, tc)
+    params = init_fn(KEY)
+    opt = opt_init(params)
+    stream = TokenStream(cfg.vocab_size, 64, 4, seed=0)
+    return cfg, tc, jax.jit(train_step), params, opt, stream
+
+
+# ---------------------------------------------------------------------------
+# loss goes down / grad accumulation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_loss_decreases():
+    _, _, step, params, opt, stream = _tiny_setup()
+    losses = []
+    for i in range(15):
+        params, opt, m = step(params, opt, stream.batch_at(i), i)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+
+def test_grad_accum_matches_full_batch():
+    """microbatch=2 over batch 4 must produce the same update as one shot."""
+    cfg = get_config("llama3.2-3b", smoke=True)
+    init_fn, apply_fn, _ = build_model(cfg)
+    params = init_fn(KEY)
+    batch = TokenStream(cfg.vocab_size, 32, 4, seed=0).batch_at(0)
+
+    outs = {}
+    for mb in (0, 2):
+        tc = TrainConfig(microbatch=mb, grad_clip=0.0)
+        train_step, opt_init = make_train_step(apply_fn, cfg, tc)
+        p2, _, m = jax.jit(train_step)(params, opt_init(params), batch, 0)
+        outs[mb] = (m["loss"], p2)
+    assert float(outs[0][0]) == pytest.approx(float(outs[2][0]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[2][1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_optimizer_variants_step():
+    for kw in (dict(optimizer_dtype="bfloat16"),
+               dict(factored_second_moment=True),
+               dict(factored_second_moment=True,
+                    optimizer_dtype="bfloat16")):
+        tc = TrainConfig(**kw)
+        init, update = make_optimizer(tc)
+        params = {"w": jnp.ones((16, 32)), "b": jnp.ones((32,))}
+        state = init(params)
+        grads = jax.tree.map(lambda p: 0.01 * jnp.ones_like(p), params)
+        p2, s2, gnorm = update(grads, state, params, 1e-2)
+        assert np.isfinite(float(gnorm))
+        assert not np.allclose(np.asarray(p2["w"]), np.asarray(params["w"]))
+        if kw.get("factored_second_moment"):
+            assert set(s2["v"]["w"].keys()) == {"row", "col"}
+            assert s2["v"]["w"]["row"].shape == (16,)
+
+
+def test_lr_schedule_shape():
+    tc = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+    lr = lr_schedule(tc)
+    assert float(lr(0)) == pytest.approx(0.0, abs=1e-6)
+    assert float(lr(10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr(100)) < 0.2
+
+
+def test_grad_clip_bounds_update():
+    tc = TrainConfig(grad_clip=1.0)
+    init, update = make_optimizer(tc)
+    params = {"w": jnp.zeros((8, 8))}
+    state = init(params)
+    huge = {"w": 1e6 * jnp.ones((8, 8))}
+    _, _, gnorm = update(huge, state, params, 1e-3)
+    assert float(gnorm) > 1e6 - 1                 # reported pre-clip norm
+
+
+# ---------------------------------------------------------------------------
+# checkpointing: atomic, integrity, exact resume, elastic
+# ---------------------------------------------------------------------------
+
+def test_ckpt_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(8.0), "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+    save(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    back = restore(str(tmp_path), tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_ckpt_corruption_detected(tmp_path):
+    tree = {"a": jnp.arange(64.0)}
+    path = save(str(tmp_path), 1, tree)
+    fname = [f for f in os.listdir(path) if f.endswith(".npy")][0]
+    arr = np.load(os.path.join(path, fname))
+    arr[0] += 1
+    np.save(os.path.join(path, fname), arr)
+    with pytest.raises((IOError, ValueError), match="checksum|crc|corrupt"):
+        restore(str(tmp_path), tree)
+
+
+def test_ckpt_retention(tmp_path):
+    tree = {"a": jnp.zeros(4)}
+    for s in (1, 2, 3, 4, 5):
+        save(str(tmp_path), s, tree, keep=2)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(str(tmp_path))
+                   if d.startswith("step_"))
+    assert steps == [4, 5]
+
+
+def test_ckpt_async_then_restore(tmp_path):
+    tree = {"w": jnp.full((16,), 3.0)}
+    save_async(str(tmp_path), 2, tree)
+    wait_pending()
+    back = restore(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))
+
+
+@pytest.mark.slow
+def test_exact_resume_equivalence(tmp_path):
+    """Train 6 steps straight == train 3, checkpoint, restore, train 3 more
+    (deterministic data + stateless loop = exact fault recovery)."""
+    _, tc, step, params0, opt0, stream = _tiny_setup()
+
+    p, o = params0, opt0
+    for i in range(6):
+        p, o, _ = step(p, o, stream.batch_at(i), i)
+    straight = jax.tree.leaves(p)
+
+    p, o = params0, opt0
+    for i in range(3):
+        p, o, _ = step(p, o, stream.batch_at(i), i)
+    save(str(tmp_path), 3, {"params": p, "opt": o})
+    back = restore(str(tmp_path), {"params": p, "opt": o})
+    p, o = back["params"], back["opt"]
+    for i in range(3, 6):
+        p, o, _ = step(p, o, stream.batch_at(i), i)
+    resumed = jax.tree.leaves(p)
+
+    for a, b in zip(straight, resumed):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_trainer_watchdog_and_history():
+    _, tc, step, params, opt, stream = _tiny_setup()
+    tr = Trainer(train_step=step, batch_at=stream.batch_at, tc=tc,
+                 log_every=1)
+    _, _, report = tr.run(params, opt, num_steps=3)
+    assert len(report["history"]) == 3
+    assert "median_step_s" in report
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic():
+    s1 = TokenStream(1000, 32, 4, seed=5)
+    s2 = TokenStream(1000, 32, 4, seed=5)
+    b1, b2 = s1.batch_at(17), s2.batch_at(17)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = s1.batch_at(18)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_data_labels_are_shifted_tokens():
+    b = TokenStream(1000, 32, 2, seed=0).batch_at(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_vision_dataset_learnable_structure():
+    x, y = vision_dataset(256, hw=16, seed=0)
+    assert x.shape == (256, 16, 16, 1) and y.shape == (256,)
+    # same-class images correlate more than cross-class (templates + noise)
+    x = np.asarray(x).reshape(256, -1)
+    y = np.asarray(y)
+    same, diff = [], []
+    for c in range(3):
+        idx = np.where(y == c)[0][:8]
+        other = np.where(y != c)[0][:8]
+        if len(idx) >= 2:
+            same.append(np.corrcoef(x[idx[0]], x[idx[1]])[0, 1])
+            diff.append(np.corrcoef(x[idx[0]], x[other[0]])[0, 1])
+    assert np.mean(same) > np.mean(diff)

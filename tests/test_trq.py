@@ -1,0 +1,166 @@
+"""Unit + property tests for the TRQ quantizer (paper Eq. 1/7/8/11)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trq import (ideal_params, make_params, quant_mse, trq_ad_ops,
+                            trq_quant, trq_quant_ste, uniform_code,
+                            uniform_quant)
+
+F32 = np.float32
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 — uniform quantization
+# ---------------------------------------------------------------------------
+
+def test_uniform_quant_grid_and_clip():
+    x = jnp.asarray([-5.0, 0.0, 0.49, 0.5, 1.49, 100.0])
+    q = uniform_quant(x, 1.0, 3)            # 3 bits -> levels 0..7
+    np.testing.assert_allclose(q, [0, 0, 0, 1, 1, 7])
+
+
+def test_uniform_rounds_half_away_from_zero():
+    # SAR threshold comparison v >= (idx - 1/2) * lsb implies 0.5 -> 1,
+    # 1.5 -> 2 (unlike numpy's half-to-even)
+    q = uniform_quant(jnp.asarray([0.5, 1.5, 2.5]), 1.0, 4)
+    np.testing.assert_allclose(q, [1, 2, 3])
+
+
+@given(st.floats(-1e3, 1e3), st.floats(0.01, 10.0), st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_uniform_quant_error_bound(x, delta, k):
+    q = float(uniform_quant(jnp.float32(x), delta, k))
+    lo, hi = 0.0, (2 ** k - 1) * delta
+    eps = 1e-5 * max(abs(hi), 1.0)                # f32 round-off slack
+    if lo <= x <= hi:
+        assert abs(q - x) <= delta / 2 + 1e-4 * delta
+    assert lo - eps <= q <= hi + eps
+
+
+# ---------------------------------------------------------------------------
+# Eq. 7 — twin-range
+# ---------------------------------------------------------------------------
+
+def _params(**kw):
+    kw.setdefault("n_r1", 3)
+    kw.setdefault("n_r2", 4)
+    kw.setdefault("m", 3)
+    return make_params(**kw)
+
+
+def test_trq_fine_in_r1_coarse_outside():
+    p = _params(delta_r1=1.0)                 # R1 = [0, 8), delta_r2 = 8
+    assert float(trq_quant(jnp.float32(3.2), p)) == 3.0       # fine grid
+    assert float(trq_quant(jnp.float32(20.0), p)) == 24.0     # coarse grid
+    # R1 values are exactly representable (early bird = lossless)
+    for v in range(8):
+        assert float(trq_quant(jnp.float32(v), p)) == v
+
+
+def test_trq_grid_alignment_eq8():
+    """delta_r2 = 2^m * delta_r1: every coarse level lies on the fine grid."""
+    p = _params(delta_r1=0.5, m=3)
+    xs = jnp.linspace(0, 50, 401)
+    q = trq_quant(xs, p)
+    idx = np.asarray(q) / 0.5
+    np.testing.assert_allclose(idx, np.round(idx), atol=1e-5)
+
+
+@given(st.floats(0, 200), st.integers(1, 6), st.integers(1, 7),
+       st.integers(0, 5))
+@settings(max_examples=300, deadline=None)
+def test_trq_idempotent(x, n_r1, n_r2, m):
+    p = make_params(delta_r1=1.0, n_r1=n_r1, n_r2=n_r2, m=m)
+    q1 = float(trq_quant(jnp.float32(x), p))
+    q2 = float(trq_quant(jnp.float32(q1), p))
+    assert q1 == pytest.approx(q2, abs=1e-4)
+
+
+@given(st.floats(-100, 100))
+@settings(max_examples=200, deadline=None)
+def test_trq_signed_is_odd_function(x):
+    p = _params(delta_r1=1.0, signed=True)
+    q = float(trq_quant(jnp.float32(x), p))
+    qn = float(trq_quant(jnp.float32(-x), p))
+    assert q == pytest.approx(-qn, abs=1e-5)
+
+
+def test_trq_bias_offset_moves_r1():
+    # bias=b => R1 = [b*2^n_r1*d1, (b+1)*2^n_r1*d1) (paper §IV-B)
+    p = _params(delta_r1=1.0, bias=2.0, n_r1=3)   # R1 = [16, 24)
+    assert float(trq_quant(jnp.float32(17.3), p)) == 17.0     # fine
+    assert float(trq_quant(jnp.float32(3.0), p)) == 0.0       # coarse d2=8
+    assert float(trq_quant(jnp.float32(20.0), p)) == 20.0     # in R1
+
+
+def test_trq_uniform_mode_fallback():
+    p = _params(mode="uniform", delta_r1=1.0)     # plain n_r2-bit, d2 = 8
+    assert float(trq_quant(jnp.float32(3.0), p)) == 0.0
+    assert float(trq_quant(jnp.float32(11.0), p)) == 8.0   # 11/8 -> 1
+    assert float(trq_quant(jnp.float32(12.0), p)) == 16.0  # half away from 0
+
+
+# ---------------------------------------------------------------------------
+# A/D operation counting (Eq. 6/9)
+# ---------------------------------------------------------------------------
+
+def test_ad_ops_early_bird_vs_stop():
+    p = _params(delta_r1=1.0, n_r1=3, n_r2=4, nu=1)
+    ops = trq_ad_ops(jnp.asarray([2.0, 100.0]), p)
+    assert int(ops[0]) == 1 + 3                   # detect + short search
+    assert int(ops[1]) == 1 + 4                   # detect + truncated search
+    pu = _params(mode="uniform")
+    np.testing.assert_array_equal(trq_ad_ops(jnp.asarray([2.0, 100.0]), pu),
+                                  [4, 4])
+
+
+def test_mean_ops_decrease_with_skew():
+    """The paper's premise: concentration near zero => fewer ops."""
+    p = _params(delta_r1=1.0, n_r1=3, n_r2=7, nu=1)
+    skew = jnp.asarray(np.abs(np.random.default_rng(0).normal(0, 2, 4096)))
+    flat = jnp.asarray(np.random.default_rng(0).uniform(0, 100, 4096))
+    assert float(trq_ad_ops(skew, p).mean()) < float(trq_ad_ops(flat, p).mean())
+
+
+# ---------------------------------------------------------------------------
+# Eq. 11 — ideal case
+# ---------------------------------------------------------------------------
+
+def test_ideal_params_lossless_r1():
+    p = ideal_params(r_ideal=7, n_r1=4, n_r2=4)
+    assert p.m == 3 and float(p.delta_r1) == 1.0
+    # integers inside R1 = [0,16) are lossless
+    xs = jnp.arange(16.0)
+    np.testing.assert_allclose(trq_quant(xs, p), xs)
+    # coarse grid still covers the full 2^7 span
+    assert float(trq_quant(jnp.float32(127.0), p)) == pytest.approx(
+        120.0, abs=8)
+
+
+# ---------------------------------------------------------------------------
+# STE / differentiability
+# ---------------------------------------------------------------------------
+
+def test_ste_gradient_is_identity():
+    p = _params(delta_r1=1.0)
+    g = jax.grad(lambda x: jnp.sum(trq_quant_ste(x, p)))(jnp.asarray([3.3, 40.0]))
+    np.testing.assert_allclose(g, [1.0, 1.0])
+
+
+def test_quant_mse_zero_on_grid():
+    p = _params(delta_r1=1.0)
+    xs = jnp.asarray([0.0, 1.0, 5.0, 7.0])     # all in lossless R1
+    assert float(quant_mse(xs, p)) == 0.0
+
+
+def test_trq_under_jit_vmap():
+    p = _params(delta_r1=1.0)
+    xs = jnp.linspace(0, 60, 64).reshape(8, 8)
+    direct = trq_quant(xs, p)
+    jitted = jax.jit(trq_quant)(xs, p)
+    vmapped = jax.vmap(lambda r: trq_quant(r, p))(xs)
+    np.testing.assert_allclose(direct, jitted)
+    np.testing.assert_allclose(direct, vmapped)
