@@ -1,0 +1,3 @@
+"""Distribution layer: logical-axis sharding over jax meshes."""
+from .sharding import (_PARAM_RULES, logical, param_pspecs, shard, use_mesh,
+                       zero1_upgrade)

@@ -1,0 +1,279 @@
+"""Logical-axis sharding: the one place that knows how model axes map to
+mesh axes.
+
+Model code annotates activations with *logical* axis names
+(``shard(x, "batch", "seq", None)``) and parameters are matched against the
+``_PARAM_RULES`` regex table; this module resolves both onto whatever mesh
+is active:
+
+* no mesh (unit tests, single-host smoke runs) — every call is a no-op;
+* host mesh ``(n, 1)`` — constraints resolve but every axis has size 1;
+* production meshes ``(16, 16)`` / ``(2, 16, 16)`` — batch spreads over
+  ``('pod', 'data')``, the tensor/expert/sequence-parallel axes over
+  ``'model'``.
+
+Resolution is rule-based so a ``use_mesh(mesh, rules={"seq": None})``
+context can switch strategies (e.g. disable sequence parallelism for
+decode) without touching model code.  Axes that do not divide the mesh are
+silently dropped (``_drop_indivisible``): whisper's 51865-token vocab simply
+stays replicated on a 16-way axis instead of erroring.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Optional, Sequence
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# data-parallel mesh axes, outermost first ('pod' only exists multi-pod)
+_DP_AXES = ("pod", "data")
+
+# logical axis -> mesh axis (str), tuple of mesh axes, or None (replicated).
+# 'batch' resolves to the subset of DP axes present in the active mesh; all
+# model-parallel logical axes share the 'model' axis (Megatron layout).
+_DEFAULT_RULES = {
+    "batch": _DP_AXES,
+    "seq": "model",        # sequence/context parallelism (fsdp_cp)
+    "heads": "model",      # attention-head tensor parallelism
+    "kv": "model",         # KV-head parallelism (GQA decode)
+    "ffn": "model",        # MLP hidden dim
+    "vocab": "model",      # vocab-parallel embedding / logits
+    "experts": "model",    # MoE expert parallelism
+    "inner": "model",      # mamba d_inner channel parallelism
+    # raw mesh axis names pass through so rules can name them directly
+    "pod": "pod",
+    "data": "data",
+    "model": "model",
+}
+
+# module-level registry: the active mesh + resolution rules.  A dict (not
+# contextvars) on purpose — tests poke _ACTIVE["mesh"] directly, and jit
+# tracing happens under the same thread that entered use_mesh().
+_ACTIVE: dict = {"mesh": None, "rules": dict(_DEFAULT_RULES)}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
+    """Activate ``mesh`` (and optional rule overrides) for shard()/logical()
+    calls in the dynamic extent.  Nestable; restores the outer context."""
+    prev = (_ACTIVE["mesh"], _ACTIVE["rules"])
+    merged = dict(_DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["rules"] = merged
+    try:
+        yield mesh
+    finally:
+        _ACTIVE["mesh"], _ACTIVE["rules"] = prev
+
+
+def _mesh_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names) if mesh is not None else ()
+
+
+def _resolve(axis, mesh, rules):
+    """One logical name -> mesh axis entry (str | tuple | None)."""
+    if axis is None:
+        return None
+    entry = rules.get(axis) if isinstance(axis, str) else axis
+    if entry is None:
+        return None
+    names = _mesh_axes(mesh)
+    if isinstance(entry, (tuple, list)):
+        if mesh is not None:
+            entry = tuple(a for a in entry if a in names)
+        return tuple(entry) if entry else None
+    if mesh is not None and entry not in names:
+        return None
+    return entry
+
+
+def logical(*axes) -> P:
+    """Resolve logical axis names to a PartitionSpec under the active
+    mesh/rules.  ``None`` entries stay replicated; unknown names resolve to
+    ``None`` rather than erroring."""
+    mesh, rules = _ACTIVE["mesh"], _ACTIVE["rules"]
+    return P(*(_resolve(a, mesh, rules) for a in axes))
+
+
+def _entry_size(mesh, entry) -> int:
+    """Number of shards an entry (mesh axis | tuple | None) produces."""
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    return int(np.prod([int(mesh.shape[a]) for a in axes], initial=1))
+
+
+def _drop_indivisible(spec: P, shape: Sequence[int]) -> P:
+    """Replace spec entries whose shard count does not divide the dim with
+    ``None`` (replicated).  Only indivisible dims are dropped."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return spec
+    out = []
+    for i, dim in enumerate(shape):
+        entry = spec[i] if i < len(spec) else None
+        if entry is not None and int(dim) % _entry_size(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    return P(*out)
+
+
+def _dedupe_axes(spec: P) -> P:
+    """Drop repeated mesh axes (first occurrence wins) — a spec may not use
+    one mesh axis on two dims (e.g. 'seq' and 'ffn' both -> 'model')."""
+    seen: set = set()
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in axes if a not in seen)
+        seen.update(kept)
+        if not kept:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            out.append(kept)
+        else:
+            out.append(kept[0])
+    return P(*out)
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """Constrain ``x`` onto the active mesh along logical ``axes``.
+
+    No-op without an active mesh; inside one, a
+    ``with_sharding_constraint`` whose spec has indivisible dims dropped and
+    duplicate mesh axes deduped (first dim wins)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    spec = _dedupe_axes(_drop_indivisible(logical(*axes), x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+# (regex, trailing-dims logical spec).  Matched with re.search, first hit
+# wins; the spec is right-aligned against the leaf shape (leading layer-
+# stack / scan dims stay replicated).  Covers every parameter path of every
+# registered arch — tests/test_sharding.py enforces totality.
+
+_PARAM_RULES = (
+    # token embedding / output head: vocab-parallel
+    (r"embed/tok$",                    ("vocab", None)),
+    (r"lm_head/w$",                    (None, "vocab")),
+    # modality frontends (d_model -> d_model projections): replicated
+    (r"frontend/(patch|frame)_proj/w$", (None, None)),
+    (r"frontend/(patch|frame)_proj/b$", (None,)),
+    # attention (+ cross-attention: 'xattn/wq' also matches 'attn/wq')
+    (r"attn/w[qkv]/w$",                (None, "heads")),
+    (r"attn/w[qkv]/b$",                ("heads",)),
+    (r"attn/wo/w$",                    ("heads", None)),
+    (r"attn/wo/b$",                    (None,)),
+    # dense MLP
+    (r"mlp/w_(up|gate)/w$",            (None, "ffn")),
+    (r"mlp/w_(up|gate)/b$",            ("ffn",)),
+    (r"mlp/w_down/w$",                 ("ffn", None)),
+    (r"mlp/w_down/b$",                 (None,)),
+    # MoE: router replicated, expert stacks expert-parallel
+    (r"moe/router/w$",                 (None, None)),
+    (r"moe/w_(gate|up)$",              ("experts", None, None)),
+    (r"moe/w_down$",                   ("experts", None, None)),
+    # mamba: d_inner channel-parallel
+    (r"mamba/in_proj/w$",              (None, "inner")),
+    (r"mamba/conv_w$",                 (None, "inner")),
+    (r"mamba/x_proj/w$",               ("inner", None)),
+    (r"mamba/dt_proj$",                (None, "inner")),
+    (r"mamba/dt_bias$",                ("inner",)),
+    (r"mamba/a_log$",                  ("inner", None)),
+    (r"mamba/d$",                      ("inner",)),
+    (r"mamba/out_proj/w$",             ("inner", None)),
+    # rwkv6: head-channel parallel on the d_model-sized attention dim
+    (r"rwkv/mu$",                      (None, None)),
+    (r"rwkv/w_[rkvg]/w$",              (None, "heads")),
+    (r"rwkv/decay_w$",                 ("heads",)),
+    (r"rwkv/decay_lora_a$",            (None, None)),
+    (r"rwkv/decay_lora_b$",            (None, "heads")),
+    (r"rwkv/bonus_u$",                 ("heads",)),
+    (r"rwkv/w_o/w$",                   ("heads", None)),
+    (r"rwkv/ln_x/(scale|bias)$",       ("heads",)),
+    # norms (rmsnorm/layernorm, top-level and per-layer): replicated
+    (r"(norm1|norm2|ln1|ln2|ln_x|final_norm|enc_norm|dec_norm)"
+     r"/(scale|bias)$",                (None,)),
+)
+
+# MoE expert-FFN weights whose d_ff dim is additionally sharded over 'data'
+# (weight-FSDP, arctic-480b); dim index of d_ff from the right.
+_MOE_FFN_DIM = {r"moe/w_(gate|up)$": -1, r"moe/w_down$": -2}
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def param_pspecs(params, moe_ffn_shard_data: bool = False):
+    """Pytree of PartitionSpecs for a parameter pytree.
+
+    Every leaf path must match a ``_PARAM_RULES`` entry; the matched spec is
+    right-aligned to the leaf rank (leading scan/stack dims replicated),
+    resolved through the active rules, and indivisible dims are dropped
+    against the active mesh.  ``moe_ffn_shard_data`` additionally spreads
+    the MoE expert d_ff dim over 'data' (arctic-480b weight-FSDP)."""
+    mesh, rules = _ACTIVE["mesh"], _ACTIVE["rules"]
+
+    def visit(path, leaf):
+        p = _path_str(path)
+        template = None
+        for pat, spec in _PARAM_RULES:
+            if re.search(pat, p):
+                template = list(spec)
+                break
+        if template is None:
+            raise KeyError(f"no sharding rule matches param path {p!r}")
+        if moe_ffn_shard_data:
+            for pat, dim in _MOE_FFN_DIM.items():
+                if re.search(pat, p) and template[dim] is None:
+                    template[dim] = "data"
+        ndim = len(leaf.shape)
+        entries = [None] * max(ndim - len(template), 0) + template
+        resolved = P(*(_resolve(e, mesh, rules) for e in entries[:ndim]))
+        return _drop_indivisible(resolved, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 optimizer-state upgrade
+# ---------------------------------------------------------------------------
+
+def _spec_mesh_axes(spec: P):
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            yield a
+
+
+def zero1_upgrade(spec: P, shape: Sequence[int], mesh) -> P:
+    """Shard the first divisible, unsharded dim over 'data' (optimizer-state
+    ZeRO-1).  Never duplicates a mesh axis: if 'data' already appears in the
+    spec the spec is returned unchanged."""
+    if "data" not in _mesh_axes(mesh):
+        return spec
+    if "data" in set(_spec_mesh_axes(spec)):
+        return spec
+    n = int(mesh.shape["data"])
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, dim in enumerate(shape):
+        if parts[i] is None and int(dim) % n == 0:
+            parts[i] = "data"
+            break
+    return P(*parts)

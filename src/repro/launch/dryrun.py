@@ -60,6 +60,8 @@ def compile_cell(arch: str, shape_name: str, mesh, verbose: bool = True):
 
 def cost_of(compiled) -> dict:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):     # older jax: one dict per program
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     coll = collective_bytes(txt)
     return {"flops": float(ca.get("flops", 0.0)),

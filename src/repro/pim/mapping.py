@@ -26,11 +26,14 @@ class LayerMapping:
     n_mvms: int               # MVMs per inference (tokens or conv positions)
     row_groups: int
     crossbars: int            # physical arrays used (row groups x col tiles)
+    k_i: int = 8              # input bit-width (1-bit DAC -> k_i slices)
+    k_w: int = 8              # weight bit-width (1-bit cells -> k_w columns)
 
     @property
     def conversions_per_inference(self) -> int:
         # slices x weight-columns x row-groups x outputs x MVMs  (Eq. 4)
-        return 8 * 8 * self.row_groups * self.out_features * self.n_mvms
+        return self.k_i * self.k_w * self.row_groups * self.out_features \
+            * self.n_mvms
 
 
 def map_linear(name: str, in_features: int, out_features: int,
@@ -38,7 +41,7 @@ def map_linear(name: str, in_features: int, out_features: int,
     groups = math.ceil(in_features / cfg.xbar)
     col_tiles = math.ceil(out_features * cfg.k_w / cfg.xbar)
     return LayerMapping(name, in_features, out_features, n_mvms,
-                        groups, groups * col_tiles)
+                        groups, groups * col_tiles, k_i=cfg.k_i, k_w=cfg.k_w)
 
 
 def map_conv2d(name: str, c_in: int, c_out: int, k: int, h_out: int,

@@ -1,0 +1,71 @@
+"""Property-test shim: real ``hypothesis`` when importable, else a fixed
+seeded-example fallback driving the same test bodies.
+
+The container has no network access, so ``hypothesis`` may be absent.  Test
+modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis``; the fallback generates a deterministic example set per
+property (range corners first, then seeded uniform draws), so the same
+assertions run either way — with fewer examples and no shrinking, which is
+the accepted trade-off for a hermetic test environment.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import numpy as _np
+
+    _SEED = 20260731
+    _MAX_FALLBACK_EXAMPLES = 32   # cap per property (seeded, no shrinking)
+
+    class _Strategy:
+        def __init__(self, draw, corners):
+            self._draw = draw
+            self.corners = corners
+
+        def example_at(self, rng, i):
+            if i < len(self.corners):
+                return self.corners[i]
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value, max_value):
+            lo, hi = float(min_value), float(max_value)
+            corners = [lo, hi]
+            if lo < 0.0 < hi:
+                corners.append(0.0)
+            return _Strategy(lambda r: float(r.uniform(lo, hi)), corners)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            lo, hi = int(min_value), int(max_value)
+            corners = [lo, hi] if hi != lo else [lo]
+            return _Strategy(lambda r: int(r.integers(lo, hi + 1)), corners)
+
+    st = _Strategies()
+
+    def settings(**kw):
+        def deco(fn):
+            fn._propshim_settings = kw
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            limit = getattr(fn, "_propshim_settings",
+                            {}).get("max_examples", _MAX_FALLBACK_EXAMPLES)
+            n = min(int(limit), _MAX_FALLBACK_EXAMPLES)
+
+            # no functools.wraps: pytest must see the wrapper's own
+            # (empty) signature, not the strategy params as fixtures
+            def run():
+                rng = _np.random.default_rng(_SEED)
+                for i in range(n):
+                    example = tuple(s.example_at(rng, i) for s in strategies)
+                    fn(*example)
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.__module__ = fn.__module__
+            return run
+        return deco

@@ -69,6 +69,7 @@ def test_calibrated_params_are_usable(rng):
     assert float(jnp.mean(ops)) == pytest.approx(cal.mean_ops, rel=0.05)
 
 
+@pytest.mark.slow
 def test_calibrate_model_accuracy_loop(rng):
     """Outer loop: n_max descends until the accuracy drop exceeds the
     threshold; the returned calibration is the last good one."""

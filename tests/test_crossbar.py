@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, st
 
 from repro.core.trq import make_params
 from repro.pim.crossbar import (PimConfig, bit_exact_mvm, bitplanes,

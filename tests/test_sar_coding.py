@@ -6,7 +6,7 @@ through the shift-only S+A decode."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, st
 
 from repro.core.coding import (code_bits, decode, decode_index, encode,
                                shift_add, split)

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, st
 
 from repro.core.trq import (ideal_params, make_params, quant_mse, trq_ad_ops,
                             trq_quant, trq_quant_ste, uniform_code,
