@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.core.trq import make_params, trq_quant
 from repro.kernels import (trq_group_mvm_pallas, trq_quant_pallas,
                            xbar_mvm_pallas)
+from repro.pim import list_backends, pim_mvm
 from repro.pim.crossbar import bit_exact_mvm, fake_quant_mvm
 
 from .common import emit, timeit
@@ -46,6 +47,31 @@ def run(quick: bool = False) -> None:
                     iters=2 if quick else 3)
     emit("kernel.xbar_mvm.pallas_interp", us, "m16.k128.n16.8x8planes")
     emit("kernel.xbar_mvm.jnp_oracle", us_ref, "m16.k128.n16.8x8planes")
+
+    # -- registered-backend sweep: one shape, every datapath ---------------
+    # same MVM through the whole repro.pim.backend registry so BENCH_*.json
+    # tracks the fast path (pallas) against the oracle paths over time.
+    # bit_exact runs lossless (its registers live on the raw BL grid) and a
+    # smaller shape — it is O(k_i*k_w*G) matmuls by design.
+    mb, kb, nb = (32, 256, 32) if quick else (64, 512, 64)
+    ab = jnp.asarray(rng.normal(0, 1, (mb, kb)).astype(np.float32))
+    wb = jnp.asarray(rng.normal(0, 1, (kb, nb)).astype(np.float32))
+    ab_s = ab[: mb // 2, :128]
+    wb_s = wb[:128, : nb // 2]
+    shape_note = f"m{mb}.k{kb}.n{nb}"
+    for name in list_backends():
+        small = name == "bit_exact"
+        aa, ww = (ab_s, wb_s) if small else (ab, wb)
+        trq = None if small else p
+        us = timeit(lambda a_, w_: pim_mvm(a_, w_, trq, backend=name).y,
+                    aa, ww, iters=2 if quick else 3)
+        out = pim_mvm(aa, ww, trq, backend=name)
+        conv = (aa.shape[0] * ww.shape[1]
+                * -(-aa.shape[1] // 128) * (64 if small else 1))
+        mean_ops = float(out.ad_ops) / conv
+        note = (f"m{aa.shape[0]}.k{aa.shape[1]}.n{ww.shape[1]}"
+                if small else shape_note)
+        emit(f"backend.{name}.mvm", us, f"{note}.mean_ad_ops={mean_ops:.2f}")
 
 
 if __name__ == "__main__":

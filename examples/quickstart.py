@@ -1,9 +1,11 @@
-"""Quickstart: the paper's technique in 60 lines.
+"""Quickstart: the paper's technique in 80 lines.
 
 1. Build a skewed bit-line distribution (what ReRAM crossbars actually emit).
 2. Calibrate TRQ with Algorithm 1 — no retraining.
 3. Quantize + count A/D operations; compare against the 8-bit uniform SAR.
 4. Run the same thing through the Pallas TRQ kernel (interpret mode on CPU).
+5. Run one MVM on every registered PIM execution backend — the same
+   ``PimOut(y, ad_ops)`` contract every model layer consumes.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,8 +14,9 @@ import jax.numpy as jnp
 
 from repro.core.calibrate import calibrate_layer
 from repro.core.energy import R_ADC_DEFAULT, adc_energy_pj
-from repro.core.trq import trq_ad_ops, trq_quant
+from repro.core.trq import make_params, trq_ad_ops, trq_quant
 from repro.kernels import trq_quant_pallas
+from repro.pim import list_backends, pim_mvm
 
 # -- 1. a Fig-3a-style BL distribution: dense near zero + sparse tail -------
 rng = np.random.default_rng(0)
@@ -49,3 +52,19 @@ print(f"energy for {ops.size} conversions: {e_trq:.0f} pJ vs {e_uni:.0f} pJ")
 q_k, ops_k = trq_quant_pallas(yj.reshape(64, 64), p, interpret=True)
 assert np.allclose(np.asarray(q_k).ravel(), np.asarray(q)), "kernel != core"
 print("pallas kernel matches the behavioral model bit-for-bit ✓")
+
+# -- 5. one MVM on every registered execution backend -----------------------
+# exact (digital FP), fake_quant (jnp scan), pallas (fused kernel),
+# bit_exact (full ISAAC sliced datapath) — all behind PimOut(y, ad_ops)
+x = jnp.asarray(rng.normal(0, 1, (8, 256)).astype(np.float32))
+w = jnp.asarray(rng.normal(0, 1, (256, 16)).astype(np.float32))
+pg = make_params(delta_r1=1.0, n_r1=p.n_r1, n_r2=p.n_r2, m=p.m, signed=True)
+ref = pim_mvm(x, w, None, backend="exact").y
+print("backend sweep (same MVM, per-group TRQ where applicable):")
+for name in list_backends():
+    # bit_exact registers act on the raw BL integer grid (calibrate on
+    # collect_bl_samples output); pass None here for the lossless datapath
+    out = pim_mvm(x, w, None if name == "bit_exact" else pg, backend=name,
+                  auto_range=True)
+    err = float(jnp.linalg.norm(out.y - ref) / jnp.linalg.norm(ref))
+    print(f"  {name:10s} rel_err={err:.4f}  ad_ops={float(out.ad_ops):>9.0f}")

@@ -1,24 +1,31 @@
 """Serving with the paper's datapath: continuous-batching engine over a
-small LM whose every linear layer runs TRQ fake-quant partial-sum
-quantization (the SAR-ADC behavioral model) — deployment exactly as the
-paper intends: PTQ, no retraining, ADC resolution unchanged.
+small LM whose every linear layer runs TRQ partial-sum quantization on a
+selectable PIM execution backend — deployment exactly as the paper intends:
+PTQ, no retraining, ADC resolution unchanged.
 
-Also demonstrates the energy accounting hook: per-token A/D-operation
-estimates from the calibrated register values.
+The full flow: sample per-layer partial sums -> Algorithm-1 calibration ->
+``QuantState`` (per-layer SAR registers) -> save/load next to a checkpoint
+-> serve with per-layer registers + exact A/D-operation (energy) accounting.
 
-  PYTHONPATH=src python examples/serve_trq.py [--requests 8]
+  PYTHONPATH=src python examples/serve_trq.py [--requests 8] [--pim pallas]
 """
 import argparse
 import sys
+import tempfile
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro.configs.base import TRQConfig
-from repro.core.energy import R_ADC_DEFAULT
+from repro.core.calibrate import calibrate_layer, to_quant_state
+from repro.core.energy import R_ADC_DEFAULT, adc_energy_pj
+from repro.core.quant_state import (load_quant_state, save_quant_state,
+                                    use_quant_state)
 from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import build_model, get_config
+from repro.pim import ad_ops_tally
 from repro.serve.engine import ServeEngine
 
 
@@ -27,41 +34,81 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--n-r1", type=int, default=4)
-    ap.add_argument("--n-r2", type=int, default=4)
-    ap.add_argument("--m", type=int, default=3)
+    ap.add_argument("--pim", default="fake_quant",
+                    choices=["fake_quant", "pallas"])
+    ap.add_argument("--n-max", type=int, default=5,
+                    help="Algorithm-1 register bit-width cap")
     args = ap.parse_args(argv)
 
-    trq = TRQConfig(n_r1=args.n_r1, n_r2=args.n_r2, m=args.m, signed=True)
+    trq = TRQConfig(n_r1=4, n_r2=4, m=3, signed=True)
     cfg = get_config("llama3.2-3b", smoke=True).replace(
-        pim_mode="fake_quant", trq=trq, remat="none")
-    print(f"serving {cfg.name}-smoke with TRQ SAR registers: "
-          f"n_r1={trq.n_r1} n_r2={trq.n_r2} m={trq.m}")
+        pim_backend=args.pim, trq=trq, remat="none")
+    print(f"serving {cfg.name}-smoke on backend={cfg.pim_backend}")
 
     init_fn, apply_fn, cache_fn = build_model(cfg)
     mesh = make_host_mesh()
     rng = np.random.default_rng(0)
+
     with use_mesh(mesh):
         params = init_fn(jax.random.PRNGKey(0))
+
+        # -- 1. Algorithm-1 calibration of per-layer SAR registers ----------
+        # sample each linear layer's scaled per-group partial sums from one
+        # unrolled eager forward (the ad_ops tally doubles as a layer census)
+        cfg_u = cfg.replace(scan_layers=False)
+        _, apply_u, _ = build_model(cfg_u)
+        toks = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)}
+        with ad_ops_tally() as census:
+            apply_u(params, toks, mode="train")
+        layer_names = sorted(census.by_layer)
+        # calibrate on a synthetic near-zero-concentrated sample per layer
+        # (a real deployment feeds collect_bl_samples of each layer here)
+        cal = {}
+        for i, name in enumerate(layer_names):
+            y = np.abs(rng.normal(0, 2.0 + i, 8192)).round()
+            cal[name] = calibrate_layer(y, n_max=args.n_max)
+        qs = to_quant_state(cal, signed=True)
+        print(f"calibrated {len(qs)} layers; "
+              f"mean ops/conv {np.mean([c.mean_ops for c in cal.values()]):.2f} "
+              f"vs {R_ADC_DEFAULT} uniform")
+
+        # -- 2. registers persist next to the weights -----------------------
+        with tempfile.TemporaryDirectory() as d:
+            qs = load_quant_state(save_quant_state(d, qs))
+
+        # -- 3. serve with per-layer registers ------------------------------
         eng = ServeEngine(cfg, apply_fn, cache_fn, params,
-                          max_batch=args.max_batch, max_len=128)
+                          max_batch=args.max_batch, max_len=128,
+                          quant_state=qs)
         for i in range(args.requests):
             eng.submit(rng.integers(0, cfg.vocab_size, 8 + 4 * (i % 3)),
                        max_new_tokens=args.max_new)
         done = eng.run()
 
-    st = eng.stats()
-    print(f"served {st['requests']} requests | {st['decode_tokens']} tokens "
-          f"| {st['tokens_per_s']:.1f} tok/s | ttft "
-          f"{st['mean_ttft_s'] * 1e3:.0f} ms")
+        st = eng.stats()
+        print(f"served {st['requests']} requests | {st['decode_tokens']} "
+              f"tokens | {st['tokens_per_s']:.1f} tok/s | ttft "
+              f"{st['mean_ttft_s'] * 1e3:.0f} ms")
 
-    # energy estimate: ops/conversion under the configured registers vs 8b
-    # uniform, weighted by the share of conversions that land in R1 (sampled
-    # from one forward's partial-sum statistics via the behavioral model)
-    mean_ops = 1 + (trq.n_r1 + trq.n_r2) / 2      # detect + avg search depth
-    print(f"SAR ops/conversion <= {mean_ops:.1f} vs {R_ADC_DEFAULT} uniform "
-          f"-> >={R_ADC_DEFAULT / mean_ops:.2f}x ADC energy headroom "
-          "(exact counts: examples/calibrate_cnn.py)")
+        # -- 4. exact energy accounting from the backends -------------------
+        with use_quant_state(qs), ad_ops_tally() as tally:
+            apply_u(params, toks, mode="train")
+        # conversion count: a uniform R_ADC-bit register file spends exactly
+        # R_ADC ops per conversion, so its tally / R_ADC counts conversions
+        from repro.core.quant_state import QuantState
+        from repro.core.trq import make_params
+        uni_qs = QuantState(default=make_params(
+            delta_r1=1.0, n_r1=R_ADC_DEFAULT, n_r2=R_ADC_DEFAULT, m=0,
+            mode="uniform", signed=True))
+        with use_quant_state(uni_qs), ad_ops_tally() as t_uni:
+            apply_u(params, toks, mode="train")
+    total, total_uni = tally.total(), t_uni.total()
+    print(f"A/D ops for one forward: {total:.0f} "
+          f"({adc_energy_pj(total):.0f} pJ) vs uniform "
+          f"{R_ADC_DEFAULT}b {total_uni:.0f} "
+          f"({adc_energy_pj(total_uni):.0f} pJ) -> "
+          f"{total_uni / max(total, 1e-9):.2f}x fewer SAR cycles")
     for r in done[:4]:
         print(f"  req {r.uid} ({len(r.prompt)} prompt): {r.generated}")
     return 0

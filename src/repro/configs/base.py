@@ -9,6 +9,7 @@ ShapeDtypeStructs in the dry-run.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 
@@ -76,8 +77,10 @@ class ModelConfig:
     sliding_window: int = 0      # 0 = full causal
 
     # --- PIM / TRQ integration ---
-    pim_mode: str = "exact"      # exact | fake_quant (serving default set by
-                                 # the launcher; training stays exact = paper)
+    # name in the repro.pim.backend registry: exact | fake_quant | pallas |
+    # bit_exact (serving default set by the launcher; training stays exact
+    # = paper).  Overridable at runtime by a use_backend(...) context.
+    pim_backend: str = "exact"
     trq: TRQConfig = TRQConfig()
 
     # --- impl knobs (perf-tunable; see EXPERIMENTS §Perf) ---
@@ -141,7 +144,17 @@ class ModelConfig:
             ffn = "mlp"
         return mixer, ffn
 
+    @property
+    def pim_mode(self) -> str:
+        """Deprecated alias for ``pim_backend`` (pre-backend-registry name)."""
+        return self.pim_backend
+
     def replace(self, **kw) -> "ModelConfig":
+        if "pim_mode" in kw:
+            warnings.warn("ModelConfig.pim_mode is deprecated; use "
+                          "pim_backend (repro.pim.backend registry name)",
+                          DeprecationWarning, stacklevel=2)
+            kw["pim_backend"] = kw.pop("pim_mode")
         return dataclasses.replace(self, **kw)
 
 

@@ -19,6 +19,34 @@ from .energy import (E_OP_PJ, R_ADC_DEFAULT, XBAR, conversions_per_mvm,
                      LayerEnergyReport)
 from .distribution import classify, histogram_summary, DistributionInfo
 from .calibrate import (calibrate_layer, calibrate_model, summarize,
-                        LayerCalibration)
+                        to_quant_state, LayerCalibration)
+from .quant_state import (QuantState, use_quant_state, active_quant_state,
+                          quant_state_from_calibration, quant_state_to_dict,
+                          quant_state_from_dict, save_quant_state,
+                          load_quant_state)
 
-__all__ = [k for k in dir() if not k.startswith("_")]
+__all__ = [
+    # quantizer (Eq. 1/7/8)
+    "TRQParams", "make_params", "uniform_quant", "uniform_code", "trq_quant",
+    "trq_quant_ste", "trq_quant_with_ops", "trq_ad_ops", "quant_mse",
+    "ideal_params", "in_r1",
+    # SAR-ADC behavioral models
+    "sar_search_uniform", "sar_search_trq", "sar_convert_uniform",
+    "sar_convert_trq",
+    # coding
+    "encode", "decode", "decode_index", "shift_add", "code_bits",
+    # energy (Eq. 2/4/6/9)
+    "E_OP_PJ", "R_ADC_DEFAULT", "XBAR", "conversions_per_mvm",
+    "ideal_resolution", "adc_energy_pj", "mean_ops_trq", "mean_ops_uniform",
+    "trq_op_ratio", "layer_report", "model_adc_ratio",
+    "system_power_breakdown", "LayerEnergyReport",
+    # distribution analysis
+    "classify", "histogram_summary", "DistributionInfo",
+    # Algorithm 1
+    "calibrate_layer", "calibrate_model", "summarize", "to_quant_state",
+    "LayerCalibration",
+    # per-layer register state
+    "QuantState", "use_quant_state", "active_quant_state",
+    "quant_state_from_calibration", "quant_state_to_dict",
+    "quant_state_from_dict", "save_quant_state", "load_quant_state",
+]

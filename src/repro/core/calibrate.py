@@ -179,6 +179,16 @@ def calibrate_model(layer_samples: Mapping[str, np.ndarray],
     return last_good if last_good is not None else cal
 
 
+def to_quant_state(cal: Mapping[str, LayerCalibration], *,
+                   signed: Optional[bool] = None, default=None):
+    """Package an Algorithm-1 result as a per-layer
+    :class:`~repro.core.quant_state.QuantState` keyed by the calibrated
+    layer names (exact-match rules).  ``signed=True`` flips every register
+    set onto the signed per-group grid the LM fast path quantizes on."""
+    from .quant_state import quant_state_from_calibration
+    return quant_state_from_calibration(cal, signed=signed, default=default)
+
+
 def summarize(cal: Mapping[str, LayerCalibration]) -> dict:
     ops = [c.mean_ops for c in cal.values()]
     return {

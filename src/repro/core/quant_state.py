@@ -1,0 +1,180 @@
+"""Per-layer ADC register state: the artifact Algorithm 1 produces.
+
+``QuantState`` maps *layer names* (param-path-style strings such as
+``layer_0/attn/wq`` or ``dec/mlp/w_up``) to :class:`~repro.core.trq.TRQParams`
+via an ordered regex rule table — the same first-match-wins machinery as
+``repro.dist.sharding._PARAM_RULES``.  Model code asks for its layer's
+registers through :func:`active_quant_state` (installed by
+:func:`use_quant_state`, mirroring ``use_mesh``); explicit per-call params
+still win, and layers with no matching rule fall back to the model-wide
+``TRQConfig`` default.
+
+The state is a registered pytree (patterns and register bit-widths are
+static aux data; ``delta_r1``/``bias`` are traced leaves), so it can be
+threaded through jit boundaries or closed over as constants.  Because the
+traced leaves are scalars, (de)serialization is plain JSON — see
+:func:`save_quant_state` / :func:`load_quant_state` — and a state saved next
+to a checkpoint restores bit-identically on any topology.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import re
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+
+from .trq import TRQParams, make_params
+
+QUANT_STATE_FILE = "quant_state.json"
+
+_STATIC_FIELDS = ("n_r1", "n_r2", "m", "nu", "mode", "signed")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantState:
+    """Ordered (pattern, TRQParams) rules + optional default.
+
+    ``lookup(name)`` returns the first rule whose regex ``re.search``-matches
+    ``name``, else ``default``, else ``None`` (caller falls back to the
+    global ``TRQConfig``)."""
+
+    rules: tuple = ()                       # ((pattern, TRQParams), ...)
+    default: Optional[TRQParams] = None
+
+    def lookup(self, name: Optional[str]) -> Optional[TRQParams]:
+        if name is not None:
+            for pat, params in self.rules:
+                if re.search(pat, name):
+                    return params
+        return self.default
+
+    def replace(self, **kw) -> "QuantState":
+        return dataclasses.replace(self, **kw)
+
+    def __len__(self) -> int:
+        return len(self.rules)
+
+
+def _qs_flatten(qs: QuantState):
+    children = tuple(p for _, p in qs.rules) + (qs.default,)
+    aux = tuple(pat for pat, _ in qs.rules)
+    return children, aux
+
+
+def _qs_unflatten(aux, children):
+    return QuantState(rules=tuple(zip(aux, children[:-1])),
+                      default=children[-1])
+
+
+jax.tree_util.register_pytree_node(QuantState, _qs_flatten, _qs_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# ambient state (mirrors repro.dist.sharding.use_mesh)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: dict = {"qs": None}
+
+
+@contextlib.contextmanager
+def use_quant_state(qs: Optional[QuantState]):
+    """Install ``qs`` as the active per-layer register file for
+    ``pim_linear`` calls in the dynamic extent.  ``None`` is a no-op (keeps
+    call sites unconditional).  Nestable; restores the outer state."""
+    prev = _ACTIVE["qs"]
+    if qs is not None:
+        _ACTIVE["qs"] = qs
+    try:
+        yield qs
+    finally:
+        _ACTIVE["qs"] = prev
+
+
+def active_quant_state() -> Optional[QuantState]:
+    return _ACTIVE["qs"]
+
+
+# ---------------------------------------------------------------------------
+# construction from Algorithm-1 output
+# ---------------------------------------------------------------------------
+
+def quant_state_from_calibration(cal: Mapping[str, Any], *,
+                                 signed: Optional[bool] = None,
+                                 default: Optional[TRQParams] = None,
+                                 exact_names: bool = True) -> QuantState:
+    """{layer name: LayerCalibration | TRQParams} -> QuantState.
+
+    ``signed`` overrides the signed flag on every rule (the LM fast path
+    quantizes signed per-group partial sums; Algorithm 1 calibrates on the
+    unsigned BL grid).  ``exact_names`` anchors each name as a full-string
+    regex; pass False when the keys already are patterns."""
+    rules = []
+    for name, c in cal.items():
+        p = c.params if hasattr(c, "params") else c
+        if signed is not None and p.signed != signed:
+            p = p.replace(signed=signed)
+        pat = f"^{re.escape(name)}$" if exact_names else name
+        rules.append((pat, p))
+    return QuantState(rules=tuple(rules), default=default)
+
+
+# ---------------------------------------------------------------------------
+# (de)serialization — JSON, checkpoint-friendly
+# ---------------------------------------------------------------------------
+
+def _params_to_dict(p: TRQParams) -> dict:
+    d = {"delta_r1": float(np.asarray(p.delta_r1)),
+         "bias": float(np.asarray(p.bias))}
+    d.update({f: getattr(p, f) for f in _STATIC_FIELDS})
+    return d
+
+
+def _params_from_dict(d: dict) -> TRQParams:
+    return make_params(delta_r1=d["delta_r1"], bias=d["bias"],
+                       **{f: d[f] for f in _STATIC_FIELDS})
+
+
+def quant_state_to_dict(qs: QuantState) -> dict:
+    return {"rules": [{"pattern": pat, "params": _params_to_dict(p)}
+                      for pat, p in qs.rules],
+            "default": (_params_to_dict(qs.default)
+                        if qs.default is not None else None)}
+
+
+def quant_state_from_dict(d: dict) -> QuantState:
+    rules = tuple((r["pattern"], _params_from_dict(r["params"]))
+                  for r in d.get("rules", ()))
+    default = d.get("default")
+    return QuantState(rules=rules,
+                      default=_params_from_dict(default) if default else None)
+
+
+def _resolve_path(path: str) -> str:
+    """A directory (e.g. a checkpoint dir) means <dir>/quant_state.json."""
+    return path if path.endswith(".json") else \
+        os.path.join(path, QUANT_STATE_FILE)
+
+
+def save_quant_state(path: str, qs: QuantState) -> str:
+    """Write ``qs`` to ``path`` (a .json file, or a directory — e.g. the
+    checkpoint dir — receiving ``quant_state.json``).  Atomic rename so a
+    crash mid-write never corrupts an existing state."""
+    path = _resolve_path(path)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(quant_state_to_dict(qs), f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def load_quant_state(path: str) -> QuantState:
+    with open(_resolve_path(path)) as f:
+        return quant_state_from_dict(json.load(f))

@@ -14,11 +14,14 @@ corresponding hot-spots are:
                   tile before accumulation (paper §III-B abstraction).
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper), ref.py (pure-jnp oracle).  Kernels TARGET TPU; on this CPU
-container they are validated with interpret=True.
+wrapper), ref.py (pure-jnp oracle).  Kernels TARGET TPU; every wrapper's
+``interpret=None`` default auto-detects the backend (compiled on TPU,
+interpreted on this CPU container — see ``runtime.default_interpret``).
 """
+from .runtime import default_interpret, resolve_interpret
 from .trq_quant.ops import trq_quant_pallas
 from .xbar_mvm.ops import xbar_mvm_pallas
 from .trq_group_mvm.ops import trq_group_mvm_pallas
 
-__all__ = ["trq_quant_pallas", "xbar_mvm_pallas", "trq_group_mvm_pallas"]
+__all__ = ["trq_quant_pallas", "xbar_mvm_pallas", "trq_group_mvm_pallas",
+           "default_interpret", "resolve_interpret"]

@@ -1,0 +1,18 @@
+"""Kernel runtime knobs shared by every Pallas wrapper."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode is only an emulation aid: on a real TPU the
+    kernels must compile, everywhere else (CPU containers, GPU hosts) they
+    can only interpret.  Auto-detect from the active JAX backend."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> auto-detect; anything else passes through."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -2,19 +2,30 @@
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.trq import TRQParams
+from ..runtime import resolve_interpret
 from .kernel import XBAR, trq_group_mvm_tiles
 
 
-@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret",
+                                   "with_ops"))
 def trq_group_mvm_pallas(a: jax.Array, w: jax.Array, p: TRQParams,
                          a_scale=1.0, w_scale=1.0, *, block_m: int = 128,
-                         block_n: int = 128, interpret: bool = True):
-    """Per-128-row-group signed-TRQ matmul: a (..., K) @ w (K, N)."""
+                         block_n: int = 128,
+                         interpret: Optional[bool] = None,
+                         with_ops: bool = False):
+    """Per-128-row-group signed-TRQ matmul: a (..., K) @ w (K, N).
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpreted elsewhere.
+    ``with_ops=True`` additionally returns the total A/D operations (SAR
+    comparator cycles, f32 scalar) spent on the valid output region —
+    the same count ``trq_ad_ops`` produces in the behavioral simulator."""
+    interpret = resolve_interpret(interpret)
     lead = a.shape[:-1]
     k_ = a.shape[-1]
     n_ = w.shape[1]
@@ -29,5 +40,10 @@ def trq_group_mvm_pallas(a: jax.Array, w: jax.Array, p: TRQParams,
 
     grid_scale = jnp.asarray(a_scale, jnp.float32) * jnp.asarray(w_scale, jnp.float32)
     out = trq_group_mvm_tiles(a_p, w_p, p, grid_scale, block_m=block_m,
-                              block_n=block_n, interpret=interpret)
+                              block_n=block_n, interpret=interpret,
+                              with_ops=with_ops)
+    if with_ops:
+        y, ops = out
+        return (y[:m_, :n_].reshape(*lead, n_),
+                jnp.sum(ops[:m_, :n_]))
     return out[:m_, :n_].reshape(*lead, n_)

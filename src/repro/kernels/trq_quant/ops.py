@@ -3,20 +3,25 @@ tile multiples, restores), dtype-normalizing."""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.trq import TRQParams
+from ..runtime import resolve_interpret
 from .kernel import trq_quant_tiles
 
 
 @partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
 def trq_quant_pallas(x: jax.Array, p: TRQParams, *, block_m: int = 256,
-                     block_n: int = 256, interpret: bool = True):
+                     block_n: int = 256,
+                     interpret: Optional[bool] = None):
     """TRQ fake-quant + A/D op count for arbitrary-shaped ``x``.
 
-    Returns (q, ops) with q.shape == ops.shape == x.shape."""
+    Returns (q, ops) with q.shape == ops.shape == x.shape.
+    ``interpret=None`` auto-detects (compiled on TPU only)."""
+    interpret = resolve_interpret(interpret)
     orig_shape = x.shape
     flat = x.astype(jnp.float32).reshape(-1)
     n = flat.shape[0]

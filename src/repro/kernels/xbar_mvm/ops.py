@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.core.trq import TRQParams
 from repro.pim.crossbar import offset_encode
+from ..runtime import resolve_interpret
 from .kernel import XBAR, xbar_mvm_tiles
 
 
@@ -20,11 +21,14 @@ from .kernel import XBAR, xbar_mvm_tiles
 def xbar_mvm_pallas(a_uint: jax.Array, w_int: jax.Array,
                     p: Optional[TRQParams] = None, *, k_i: int = 8,
                     k_w: int = 8, r_adc: int = 8, block_m: int = 128,
-                    block_n: int = 128, interpret: bool = True):
+                    block_n: int = 128,
+                    interpret: Optional[bool] = None):
     """Bit-exact sliced-crossbar MVM with (TRQ-)ADC per bit-line.
 
     a_uint: (M, K) ints in [0, 2**k_i); w_int: (K, N) ints in
-    [-2**(k_w-1), 2**(k_w-1)).  Returns (out (M,N) f32, ops (M,N) f32)."""
+    [-2**(k_w-1), 2**(k_w-1)).  Returns (out (M,N) f32, ops (M,N) f32).
+    ``interpret=None`` auto-detects (compiled on TPU only)."""
+    interpret = resolve_interpret(interpret)
     m_, k_ = a_uint.shape
     n_ = w_int.shape[1]
     u, zp = offset_encode(w_int, k_w)

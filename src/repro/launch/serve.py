@@ -4,9 +4,11 @@
       --requests 16 --max-new 24 --pim fake_quant
 
 Serving runs the paper's deployment datapath: with ``--pim fake_quant``
-every linear layer's partial sums pass through the calibrated TRQ quantizer
-(the behavioral SAR-ADC), exactly the configuration the energy claims are
-made for.
+(or ``--pim pallas`` for the fused kernel) every linear layer's partial
+sums pass through the calibrated TRQ quantizer (the behavioral SAR-ADC),
+exactly the configuration the energy claims are made for.  ``--quant-state
+path/to/quant_state.json`` installs Algorithm-1 per-layer SAR registers;
+without it every layer auto-ranges the model-wide default.
 """
 from __future__ import annotations
 
@@ -33,17 +35,26 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--pim", choices=["exact", "fake_quant"],
-                    default="fake_quant")
+    ap.add_argument("--pim", default="fake_quant",
+                    choices=["exact", "fake_quant", "pallas", "bit_exact"],
+                    help="PIM execution backend (repro.pim.backend registry)")
+    ap.add_argument("--quant-state", default=None,
+                    help="Algorithm-1 per-layer registers "
+                         "(quant_state.json or its checkpoint dir)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke).replace(
-        pim_mode=args.pim, param_dtype="bfloat16", remat="none")
+        pim_backend=args.pim, param_dtype="bfloat16", remat="none")
+    qs = None
+    if args.quant_state:
+        from repro.core.quant_state import load_quant_state
+        qs = load_quant_state(args.quant_state)
+        print(f"loaded {len(qs)} per-layer SAR register rules")
     mesh = make_host_mesh()
     init_fn, apply_fn, cache_fn = build_model(cfg)
     rng = np.random.default_rng(args.seed)
-    print(f"arch={cfg.name} pim={cfg.pim_mode} "
+    print(f"arch={cfg.name} pim={cfg.pim_backend} "
           f"max_batch={args.max_batch} max_len={args.max_len}")
 
     def extra_inputs(b, s):
@@ -56,7 +67,7 @@ def main(argv=None):
         params = init_fn(jax.random.PRNGKey(args.seed))
         engine = ServeEngine(cfg, apply_fn, cache_fn, params,
                              max_batch=args.max_batch, max_len=args.max_len,
-                             extra_inputs=extra_inputs)
+                             extra_inputs=extra_inputs, quant_state=qs)
         for _ in range(args.requests):
             engine.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
                           max_new_tokens=args.max_new,

@@ -23,6 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import (LONG_CONTEXT_ARCHS, ModelConfig, SHAPES,
                                 ShapeConfig, TrainConfig)
+from repro.core.quant_state import QuantState, use_quant_state
 from repro.dist.sharding import param_pspecs, use_mesh
 from repro.models.registry import build_model, get_config
 from repro.serve.kvcache import cache_pspecs
@@ -141,7 +142,8 @@ def make_train_config(arch: str, **kw) -> TrainConfig:
 
 def build_train_cell(arch: str, mesh: Mesh, shape_name: str = "train_4k",
                      cfg: Optional[ModelConfig] = None,
-                     tc: Optional[TrainConfig] = None) -> Cell:
+                     tc: Optional[TrainConfig] = None,
+                     quant_state: Optional[QuantState] = None) -> Cell:
     cfg = cfg or get_config(arch)
     tc = tc or make_train_config(arch)
     shape = SHAPES[shape_name]
@@ -160,7 +162,7 @@ def build_train_cell(arch: str, mesh: Mesh, shape_name: str = "train_4k",
         rep = NamedSharding(mesh, P())
 
     def step(params, opt_state, batch, step_idx):
-        with use_mesh(mesh):
+        with use_mesh(mesh), use_quant_state(quant_state):
             return train_step(params, opt_state, batch, step_idx)
 
     return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
@@ -171,13 +173,13 @@ def build_train_cell(arch: str, mesh: Mesh, shape_name: str = "train_4k",
 
 
 def build_serve_cell(arch: str, mesh: Mesh, shape_name: str,
-                     cfg: Optional[ModelConfig] = None) -> Cell:
+                     cfg: Optional[ModelConfig] = None,
+                     quant_state: Optional[QuantState] = None) -> Cell:
     """prefill: full-prompt forward writing the cache, next-token logits.
     decode: one token for every sequence against a seq_len cache."""
     cfg = cfg or get_config(arch)
-    # serving runs the paper's datapath: weights bf16, TRQ fake-quant ON
-    cfg = cfg.replace(param_dtype="bfloat16", remat="none",
-                      pim_mode=cfg.pim_mode)
+    # serving runs the paper's datapath: weights bf16, TRQ backend ON
+    cfg = cfg.replace(param_dtype="bfloat16", remat="none")
     shape = SHAPES[shape_name]
     if shape.kind == "decode":
         # per-token weight gathers would multiply decode HBM traffic by the
@@ -199,7 +201,7 @@ def build_serve_cell(arch: str, mesh: Mesh, shape_name: str,
 
     if shape.kind == "prefill":
         def step(params, batch):
-            with use_mesh(mesh):
+            with use_mesh(mesh), use_quant_state(quant_state):
                 cache = cache_fn(b, shape.seq_len)
                 logits, new_cache, _ = apply_fn(params, batch, cache=cache,
                                                 mode="prefill")
@@ -211,7 +213,7 @@ def build_serve_cell(arch: str, mesh: Mesh, shape_name: str,
                     out_shardings=(None, c_sh))
 
     def step(params, cache, batch):
-        with use_mesh(mesh):
+        with use_mesh(mesh), use_quant_state(quant_state):
             logits, new_cache, _ = apply_fn(params, batch, cache=cache,
                                             mode="decode")
             return jnp.argmax(logits[:, -1], -1), new_cache
@@ -228,7 +230,7 @@ def build_cell(arch: str, mesh: Mesh, shape_name: str,
     shape = SHAPES[shape_name]
     if shape.kind == "train":
         return build_train_cell(arch, mesh, shape_name, cfg=cfg, **kw)
-    return build_serve_cell(arch, mesh, shape_name, cfg=cfg)
+    return build_serve_cell(arch, mesh, shape_name, cfg=cfg, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -44,12 +44,17 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--pim", choices=["exact", "fake_quant"], default="exact")
+    # training needs a gradient path: only the STE-differentiable backends.
+    # pallas/bit_exact have no VJP (inference/audit datapaths — serve CLI).
+    ap.add_argument("--pim", default="exact",
+                    choices=["exact", "fake_quant"],
+                    help="PIM execution backend (differentiable subset of "
+                         "the repro.pim.backend registry)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-json", default=None)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=args.smoke).replace(pim_mode=args.pim)
+    cfg = get_config(args.arch, smoke=args.smoke).replace(pim_backend=args.pim)
     tc = make_train_config(args.arch, learning_rate=args.lr,
                            total_steps=args.steps,
                            warmup_steps=max(args.steps // 10, 1),
@@ -57,7 +62,7 @@ def main(argv=None):
                            checkpoint_every=args.ckpt_every)
     mesh = make_host_mesh()
     print(f"arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} "
-          f"mesh={dict(mesh.shape)} pim={cfg.pim_mode}")
+          f"mesh={dict(mesh.shape)} pim={cfg.pim_backend}")
 
     init_fn, apply_fn, _ = build_model(cfg)
     stream = TokenStream(cfg.vocab_size, args.seq, args.batch, seed=args.seed)

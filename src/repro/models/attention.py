@@ -35,12 +35,16 @@ def init_attention(key, cfg: ModelConfig, bias: Optional[bool] = None):
     }
 
 
-def _qkv(p, x, cfg: ModelConfig, positions, trq, rope: bool = True):
+def _qkv(p, x, cfg: ModelConfig, positions, trq, rope: bool = True,
+         prefix: str = "attn"):
     b, s, _ = x.shape
     hd = cfg.hd
-    q = pim_linear(p["wq"], x, cfg, trq).reshape(b, s, cfg.n_heads, hd)
-    k = pim_linear(p["wk"], x, cfg, trq).reshape(b, s, cfg.n_kv_heads, hd)
-    v = pim_linear(p["wv"], x, cfg, trq).reshape(b, s, cfg.n_kv_heads, hd)
+    q = pim_linear(p["wq"], x, cfg, trq,
+                   name=f"{prefix}/wq").reshape(b, s, cfg.n_heads, hd)
+    k = pim_linear(p["wk"], x, cfg, trq,
+                   name=f"{prefix}/wk").reshape(b, s, cfg.n_kv_heads, hd)
+    v = pim_linear(p["wv"], x, cfg, trq,
+                   name=f"{prefix}/wv").reshape(b, s, cfg.n_kv_heads, hd)
     if rope:
         q = apply_rope(q, positions, cfg)
         k = apply_rope(k, positions, cfg)
@@ -144,13 +148,13 @@ def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
 
 def apply_attention(p, x, cfg: ModelConfig, positions, *, causal=True,
                     cache: Optional[dict] = None, trq: Optional[TRQParams] = None,
-                    rope: bool = True):
+                    rope: bool = True, prefix: str = "attn"):
     """Returns (out, new_cache).  cache=None -> stateless (training).
 
     Prefill (x seq > 1 with cache) writes k/v at [0, S); decode (seq == 1)
     scatters at position cache['len']."""
     b, s, _ = x.shape
-    q, k, v = _qkv(p, x, cfg, positions, trq, rope=rope)
+    q, k, v = _qkv(p, x, cfg, positions, trq, rope=rope, prefix=prefix)
     qg = _group_q(q, cfg.n_kv_heads)
     cp = cfg.parallelism == "fsdp_cp"
     if cp:
@@ -194,7 +198,7 @@ def apply_attention(p, x, cfg: ModelConfig, positions, *, causal=True,
     o = o.reshape(b, s, cfg.n_heads * cfg.hd)
     o = shard(o, "batch", "seq", None) if cp else \
         shard(o, "batch", None, "heads")
-    return pim_linear(p["wo"], o, cfg, trq), new_cache
+    return pim_linear(p["wo"], o, cfg, trq, name=f"{prefix}/wo"), new_cache
 
 
 def _scatter_time(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
@@ -217,11 +221,13 @@ def init_cross_attention(key, cfg: ModelConfig):
 
 
 def apply_cross_attention(p, x, enc_kv: dict, cfg: ModelConfig,
-                          trq: Optional[TRQParams] = None):
+                          trq: Optional[TRQParams] = None,
+                          prefix: str = "xattn"):
     """x: (B,Sd,D); enc_kv: {'k','v'} (B,Se,KV,hd) precomputed from encoder."""
     b, s, _ = x.shape
     hd = cfg.hd
-    q = pim_linear(p["wq"], x, cfg, trq).reshape(b, s, cfg.n_heads, hd)
+    q = pim_linear(p["wq"], x, cfg, trq,
+                   name=f"{prefix}/wq").reshape(b, s, cfg.n_heads, hd)
     qg = _group_q(q, cfg.n_kv_heads)
     se = enc_kv["k"].shape[1]
     if s % cfg.attn_chunk_q == 0 and se % cfg.attn_chunk_k == 0 and \
@@ -231,13 +237,16 @@ def apply_cross_attention(p, x, enc_kv: dict, cfg: ModelConfig,
     else:
         o = full_attention(qg, enc_kv["k"], enc_kv["v"], causal=False)
     o = o.reshape(b, s, cfg.n_heads * hd)
-    return pim_linear(p["wo"], o, cfg, trq)
+    return pim_linear(p["wo"], o, cfg, trq, name=f"{prefix}/wo")
 
 
 def encoder_kv(p, enc_out: jax.Array, cfg: ModelConfig,
-               trq: Optional[TRQParams] = None) -> dict:
+               trq: Optional[TRQParams] = None,
+               prefix: str = "xattn") -> dict:
     b, s, _ = enc_out.shape
     hd = cfg.hd
-    k = pim_linear(p["wk"], enc_out, cfg, trq).reshape(b, s, cfg.n_kv_heads, hd)
-    v = pim_linear(p["wv"], enc_out, cfg, trq).reshape(b, s, cfg.n_kv_heads, hd)
+    k = pim_linear(p["wk"], enc_out, cfg, trq,
+                   name=f"{prefix}/wk").reshape(b, s, cfg.n_kv_heads, hd)
+    v = pim_linear(p["wv"], enc_out, cfg, trq,
+                   name=f"{prefix}/wv").reshape(b, s, cfg.n_kv_heads, hd)
     return {"k": k, "v": v}

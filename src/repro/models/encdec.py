@@ -65,7 +65,8 @@ def init_encdec(key, cfg: ModelConfig):
 def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
     """frames: (B, T, D) precomputed frame embeddings (stub frontend)."""
     x = pim_linear(params["frontend"]["frame_proj"],
-                   frames.astype(cdtype(cfg)), cfg)
+                   frames.astype(cdtype(cfg)), cfg,
+                   name="frontend/frame_proj")
     x = x + sinusoid_pos(x.shape[1], cfg.d_model, x.dtype)[None]
     x = shard(x, "batch", "seq", None)
     b, s, _ = x.shape
@@ -74,10 +75,10 @@ def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
     def body(x_, lp):
         h = layernorm(lp["ln1"], x_, cfg.norm_eps)
         o, _ = apply_attention(lp["attn"], h, cfg, positions, causal=False,
-                               rope=False)
+                               rope=False, prefix="enc/attn")
         x_ = x_ + o
         h = layernorm(lp["ln2"], x_, cfg.norm_eps)
-        x_ = x_ + apply_mlp(lp["mlp"], h, cfg)
+        x_ = x_ + apply_mlp(lp["mlp"], h, cfg, prefix="enc/mlp")
         return shard(x_, "batch", "seq", None), None
 
     body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
@@ -88,7 +89,7 @@ def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
 def cross_kv(params, enc_out: jax.Array, cfg: ModelConfig):
     """Per-decoder-layer cross KV, stacked on the layer axis."""
     def one(lp):
-        return encoder_kv(lp["xattn"], enc_out, cfg)
+        return encoder_kv(lp["xattn"], enc_out, cfg, prefix="dec/xattn")
     return jax.vmap(one, in_axes=0, out_axes=0)(params["dec"])
 
 
@@ -114,12 +115,13 @@ def decode_stack(params, tokens: jax.Array, enc_out: Optional[jax.Array],
         lp, lc, lxkv = inputs
         h = layernorm(lp["ln1"], x_, cfg.norm_eps)
         o, nc = apply_attention(lp["attn"], h, cfg, positions,
-                                cache=lc, rope=False)
+                                cache=lc, rope=False, prefix="dec/attn")
         x_ = x_ + o
         h = layernorm(lp["ln_x"], x_, cfg.norm_eps)
-        x_ = x_ + apply_cross_attention(lp["xattn"], h, lxkv, cfg)
+        x_ = x_ + apply_cross_attention(lp["xattn"], h, lxkv, cfg,
+                                        prefix="dec/xattn")
         h = layernorm(lp["ln2"], x_, cfg.norm_eps)
-        x_ = x_ + apply_mlp(lp["mlp"], h, cfg)
+        x_ = x_ + apply_mlp(lp["mlp"], h, cfg, prefix="dec/mlp")
         x_ = shard(x_, "batch", "seq", None)
         return (x_,), (nc if lc is not None else 0)
 

@@ -8,8 +8,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TRQConfig
+from repro.core.quant_state import active_quant_state
 from repro.core.trq import TRQParams
-from repro.pim.crossbar import fake_quant_mvm
+from repro.pim.backend import active_backend, get_backend, record_ad_ops
 from repro.dist.sharding import shard
 
 
@@ -44,13 +45,20 @@ def init_linear(key, d_in: int, d_out: int, cfg: ModelConfig,
 
 
 def pim_linear(p: dict, x: jax.Array, cfg: ModelConfig,
-               trq: Optional[TRQParams] = None) -> jax.Array:
-    """x @ w on the selected PIM datapath.
+               trq: Optional[TRQParams] = None,
+               name: Optional[str] = None) -> jax.Array:
+    """x @ w on the selected PIM execution backend.
 
-    exact       -> plain matmul (training / FP baseline; the paper trains
-                   digitally and deploys PTQ inference on the crossbars).
-    fake_quant  -> per-128-row-group signed TRQ on partial sums (the paper's
-                   §III-B abstraction; trq_group_mvm kernel on real TPU).
+    The datapath is a name in the ``repro.pim.backend`` registry (exact |
+    fake_quant | pallas | bit_exact | anything registered later), chosen by
+    an ambient ``use_backend(...)`` context, else ``cfg.pim_backend``.
+
+    Per-layer SAR registers resolve in priority order: the explicit ``trq``
+    argument, then the active :class:`~repro.core.quant_state.QuantState`
+    looked up by ``name`` (Algorithm-1 calibration output), then the
+    model-wide ``cfg.trq`` default (with auto-ranging — calibrated registers
+    are exact and disable it).  Every backend's A/D-operation count is
+    forwarded to any enclosing ``ad_ops_tally()``.
     """
     w = p["w"]
     if cfg.parallelism == "fsdp_cp" and w.ndim == 2:
@@ -58,16 +66,22 @@ def pim_linear(p: dict, x: jax.Array, cfg: ModelConfig,
         # The AG has no dependence on the previous layer's activations, so
         # the latency-hiding scheduler prefetches it under compute.
         w = shard(w, None, None)
-    if cfg.pim_mode == "fake_quant":
-        t = trq if trq is not None else trq_params_from_cfg(cfg.trq)
-        # dynamic per-tensor scales put partial sums on the ADC integer grid
-        a_s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6) / 127.0
-        w_s = jnp.maximum(jnp.max(jnp.abs(w)), 1e-6) / 127.0
-        grid = (a_s * w_s * cfg.trq.delta_grid).astype(jnp.float32)
-        y = fake_quant_mvm(x, w.astype(x.dtype), t, grid, 1.0, ste=True,
-                           auto_range=(trq is None and cfg.trq.auto_range))
-    else:
-        y = x @ w.astype(x.dtype)
+
+    backend_name = active_backend() or cfg.pim_backend
+    t = trq
+    if t is None:
+        qs = active_quant_state()
+        if qs is not None:
+            t = qs.lookup(name)
+    auto_range = t is None and cfg.trq.auto_range
+    if t is None:
+        t = trq_params_from_cfg(cfg.trq)
+
+    out = get_backend(backend_name)(
+        x, w.astype(x.dtype), t, ste=True, auto_range=auto_range,
+        delta_grid=cfg.trq.delta_grid)
+    record_ad_ops(name, out.ad_ops)
+    y = out.y
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -151,14 +165,15 @@ def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None,
 
 
 def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig,
-              trq: Optional[TRQParams] = None) -> jax.Array:
-    up = pim_linear(p["w_up"], x, cfg, trq)
+              trq: Optional[TRQParams] = None,
+              prefix: str = "mlp") -> jax.Array:
+    up = pim_linear(p["w_up"], x, cfg, trq, name=f"{prefix}/w_up")
     if cfg.mlp_act == "silu":
-        gate = pim_linear(p["w_gate"], x, cfg, trq)
+        gate = pim_linear(p["w_gate"], x, cfg, trq, name=f"{prefix}/w_gate")
         h = jax.nn.silu(gate) * up
     else:
         h = jax.nn.gelu(up)
     if h.ndim == 3:
         h = shard(h, "batch", "seq", None) if cfg.parallelism == "fsdp_cp" \
             else shard(h, "batch", None, "ffn")
-    return pim_linear(p["w_down"], h, cfg, trq)
+    return pim_linear(p["w_down"], h, cfg, trq, name=f"{prefix}/w_down")

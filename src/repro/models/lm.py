@@ -103,17 +103,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 # ---------------------------------------------------------------------------
 
 def _apply_layer(p, x, cfg: ModelConfig, idx: int, positions,
-                 cache: Optional[dict], aux):
+                 cache: Optional[dict], aux, depth0: int = 0):
     mixer, ffn = cfg.layer_kind(idx)
+    # per-layer name prefix for QuantState register lookup.  idx is the
+    # position inside the repeating period (static under the period scan),
+    # depth0 the absolute depth of the period's first layer: the scan path
+    # names layers period-locally (periods share registers), the unrolled
+    # path (scan_layers=False) names every depth distinctly.
+    lname = f"layer_{depth0 + idx}"
     new_cache = None
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     if mixer == "attn":
         o, new_cache = apply_attention(p["attn"], h, cfg, positions,
-                                       cache=cache)
+                                       cache=cache, prefix=f"{lname}/attn")
     elif mixer == "mamba":
-        o, new_cache = apply_mamba(p["mamba"], h, cfg, cache=cache)
+        o, new_cache = apply_mamba(p["mamba"], h, cfg, cache=cache,
+                                   prefix=f"{lname}/mamba")
     else:
-        o, new_cache = apply_rwkv(p["rwkv"], h, cfg, cache=cache)
+        o, new_cache = apply_rwkv(p["rwkv"], h, cfg, cache=cache,
+                                  prefix=f"{lname}/rwkv")
     if cfg.remat == "names":
         # checkpoint the mixer OUTPUT: backward reuses it instead of
         # re-running the flash kv scan (seq-sharded -> ~25MB/layer/device)
@@ -124,13 +132,13 @@ def _apply_layer(p, x, cfg: ModelConfig, idx: int, positions,
 
     h = rmsnorm(p["norm2"], x, cfg.norm_eps)
     if ffn == "mlp":
-        x = x + apply_mlp(p["mlp"], h, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg, prefix=f"{lname}/mlp")
     elif ffn == "moe":
         mo, a = apply_moe(p["moe"], h, cfg)
         x, aux = x + mo, aux + a
     else:                                   # moe+mlp (arctic parallel)
         mo, a = apply_moe(p["moe"], h, cfg)
-        x = x + mo + apply_mlp(p["mlp"], h, cfg)
+        x = x + mo + apply_mlp(p["mlp"], h, cfg, prefix=f"{lname}/mlp")
         aux = aux + a
     x = shard(x, "batch", "seq", None)
     return x, new_cache, aux
@@ -142,7 +150,8 @@ def _embed_inputs(params, batch: dict, cfg: ModelConfig):
     if cfg.frontend in ("patch", "frames") and "embeds" in batch:
         name = "patch_proj" if cfg.frontend == "patch" else "frame_proj"
         fe = pim_linear(params["frontend"][name],
-                        batch["embeds"].astype(x.dtype), cfg)
+                        batch["embeds"].astype(x.dtype), cfg,
+                        name=f"frontend/{name}")
         x = jnp.concatenate([fe, x], axis=1)
     return x
 
@@ -163,19 +172,21 @@ def apply_lm(params, batch: dict, cfg: ModelConfig, *,
     else:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
 
-    def period_body(carry, inputs):
+    def period_body(carry, inputs, depth0: int = 0):
         x_, aux_ = carry
         pp, pc = inputs
         new_pc = {}
         for i in range(cfg.period):
             lp = pp[f"layer_{i}"]
             lc = pc[f"layer_{i}"] if pc is not None else None
-            x_, nc, aux_ = _apply_layer(lp, x_, cfg, i, positions, lc, aux_)
+            x_, nc, aux_ = _apply_layer(lp, x_, cfg, i, positions, lc, aux_,
+                                        depth0=depth0)
             new_pc[f"layer_{i}"] = nc
         return (x_, aux_), (new_pc if pc is not None else 0)
 
-    body = period_body
-    if cfg.remat in ("block", "full", "names"):
+    def wrap(fn):
+        if cfg.remat not in ("block", "full", "names"):
+            return fn
         if cfg.remat == "full":
             policy = None
         elif cfg.remat == "names":
@@ -183,17 +194,19 @@ def apply_lm(params, batch: dict, cfg: ModelConfig, *,
                 "mixer_out")
         else:
             policy = jax.checkpoint_policies.nothing_saveable
-        body = jax.checkpoint(period_body, policy=policy)
+        return jax.checkpoint(fn, policy=policy)
 
     if cfg.scan_layers:
         (x, aux), new_cache = jax.lax.scan(
-            body, (x, jnp.float32(0)), (params["periods"], cache))
+            wrap(period_body), (x, jnp.float32(0)), (params["periods"], cache))
     else:
         new_caches = []
         aux = jnp.float32(0)
         for pi in range(cfg.n_periods):
             pp = jax.tree.map(lambda t: t[pi], params["periods"])
             pc = jax.tree.map(lambda t: t[pi], cache) if cache is not None else None
+            body = wrap(functools.partial(period_body,
+                                          depth0=pi * cfg.period))
             (x, aux), nc = body((x, aux), (pp, pc))
             new_caches.append(nc)
         new_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *new_caches) \
@@ -212,7 +225,8 @@ def apply_lm(params, batch: dict, cfg: ModelConfig, *,
         logits = x.astype(jnp.float32) @ params["embed"]["tok"].astype(
             jnp.float32).T
     else:
-        logits = pim_linear(params["lm_head"], x, cfg).astype(jnp.float32)
+        logits = pim_linear(params["lm_head"], x, cfg,
+                            name="lm_head").astype(jnp.float32)
     logits = shard(logits, "batch", None, "vocab")
     return logits, (new_cache if cache is not None else None), aux
 

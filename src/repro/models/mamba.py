@@ -48,14 +48,14 @@ def init_mamba(key, cfg: ModelConfig):
     }
 
 
-def _ssm_coeffs(p, xc, cfg: ModelConfig, trq):
+def _ssm_coeffs(p, xc, cfg: ModelConfig, trq, prefix: str = "mamba"):
     """xc: (B,S,di) post-conv activations -> (delta (B,S,di) f32,
     B_t (B,S,ds), C_t (B,S,ds)).  The (B,S,di,ds) decay/drive tensors are
     NOT formed here — they are materialized chunk-by-chunk inside the scan
     (live bytes O(chunk), not O(S))."""
     ds = cfg.ssm_d_state
     dt_rank = p["dt_proj"].shape[0]
-    proj = pim_linear(p["x_proj"], xc, cfg, trq)
+    proj = pim_linear(p["x_proj"], xc, cfg, trq, name=f"{prefix}/x_proj")
     dt_r, b_, c_ = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
     delta = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
                             + p["dt_bias"])                   # (B,S,di)
@@ -114,11 +114,11 @@ def causal_conv(x, w, state: Optional[jax.Array] = None):
 
 
 def apply_mamba(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
-                trq: Optional[TRQParams] = None):
+                trq: Optional[TRQParams] = None, prefix: str = "mamba"):
     """x: (B,S,D).  cache (decode): {'h': (B,di,ds), 'conv': (B,dc-1,di)}."""
     b, s, _ = x.shape
     di, ds = d_inner(cfg), cfg.ssm_d_state
-    xz = pim_linear(p["in_proj"], x, cfg, trq)
+    xz = pim_linear(p["in_proj"], x, cfg, trq, name=f"{prefix}/in_proj")
     xi, z = jnp.split(xz, 2, axis=-1)
     xi = shard(xi, "batch", None, "inner")
 
@@ -126,7 +126,7 @@ def apply_mamba(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
     xc, conv_state = causal_conv(xi, p["conv_w"].astype(xi.dtype), conv_state)
     xc = jax.nn.silu(xc)
 
-    delta, b_, c_ = _ssm_coeffs(p, xc, cfg, trq)
+    delta, b_, c_ = _ssm_coeffs(p, xc, cfg, trq, prefix=prefix)
     a_neg = jnp.exp(p["a_log"])                           # (di, ds) "A"
     h0 = cache["h"] if cache else jnp.zeros((b, di, ds), jnp.float32)
 
@@ -150,6 +150,6 @@ def apply_mamba(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
 
     y = y + xc.astype(jnp.float32) * p["d"]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    out = pim_linear(p["out_proj"], y, cfg, trq)
+    out = pim_linear(p["out_proj"], y, cfg, trq, name=f"{prefix}/out_proj")
     new_cache = {"h": h_last, "conv": conv_state} if cache is not None else None
     return out, new_cache

@@ -8,6 +8,12 @@ an expert's capacity (capacity_factor * k * tokens / E) are dropped —
 standard Switch/GShard semantics; the residual connection carries them.
 
 A Switch-style load-balancing auxiliary loss is returned to the train loop.
+
+NOTE: the expert FFN matmuls are batched-over-experts einsums on stacked
+(E, d, d_ff) weights and do NOT route through ``pim_linear`` — per-layer
+QuantState registers and ad_ops accounting cover every other linear in an
+MoE arch but not the expert FFNs (a per-expert PIM backend path is future
+work; the dispatch/combine scatter math is not a crossbar op either way).
 """
 from __future__ import annotations
 
@@ -19,7 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.trq import TRQParams
 from repro.dist.sharding import shard
-from .layers import cdtype, pdtype, init_linear, pim_linear
+from .layers import cdtype, pdtype, init_linear
 
 
 def init_moe(key, cfg: ModelConfig, d_ff: Optional[int] = None):

@@ -1,5 +1,10 @@
 """repro.pim — the ReRAM crossbar datapath substrate (ISAAC-style, paper §II).
 
+``backend``   the unified PIM execution-backend API: a ``PimBackend``
+              registry (exact | fake_quant | pallas | bit_exact) behind the
+              single contract ``backend(x, w, trq) -> PimOut(y, ad_ops)``,
+              plus the ``use_backend`` ambient selector and the
+              ``ad_ops_tally`` energy-accounting hook.
 ``crossbar``  bit-exact simulation of the sliced analog MVM datapath:
               1-bit DAC input slices x 1-bit-cell weight columns, SAR-ADC
               conversion of every bit-line partial sum, digital
@@ -7,8 +12,31 @@
 ``mapping``   layer -> crossbar tiling, im2col for convolutions, and the
               per-layer conversion counts the energy model consumes.
 """
-from .crossbar import (PimConfig, bit_exact_mvm, fake_quant_mvm,
-                       collect_bl_samples, offset_encode, bitplanes)
+from .crossbar import (PimConfig, auto_range_fit, bit_exact_mvm,
+                       fake_quant_mvm, collect_bl_samples, offset_encode,
+                       bitplanes)
 from .mapping import LayerMapping, map_linear, map_conv2d, conv2d_pim, im2col
+from .backend import (PimOut, PimBackend, register_backend, get_backend,
+                      list_backends, use_backend, active_backend, pim_mvm,
+                      ad_ops_tally, AdOpsTally)
+# per-layer register state rides with the backend API (defined in core to
+# keep the dependency direction core <- pim)
+from repro.core.quant_state import (QuantState, use_quant_state,
+                                    active_quant_state,
+                                    quant_state_from_calibration,
+                                    save_quant_state, load_quant_state)
 
-__all__ = [k for k in dir() if not k.startswith("_")]
+__all__ = [
+    # backend API
+    "PimOut", "PimBackend", "register_backend", "get_backend",
+    "list_backends", "use_backend", "active_backend", "pim_mvm",
+    "ad_ops_tally", "AdOpsTally",
+    # per-layer registers
+    "QuantState", "use_quant_state", "active_quant_state",
+    "quant_state_from_calibration", "save_quant_state", "load_quant_state",
+    # behavioral simulator
+    "PimConfig", "bit_exact_mvm", "fake_quant_mvm", "auto_range_fit",
+    "collect_bl_samples", "offset_encode", "bitplanes",
+    # layer mapping
+    "LayerMapping", "map_linear", "map_conv2d", "conv2d_pim", "im2col",
+]

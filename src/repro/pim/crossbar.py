@@ -124,9 +124,35 @@ def collect_bl_samples(a_uint: jax.Array, w_int: jax.Array,
     return _bl_partial_sums(a_uint, u, cfg)
 
 
+def auto_range_fit(a: jax.Array, w: jax.Array, trq: TRQParams, grid,
+                   cfg: PimConfig = PimConfig()) -> TRQParams:
+    """Uncalibrated layers: scale ``delta_r1`` so the coarse range
+    2^(n_r2+m)*delta_r1 covers the observed per-group |psum| max (the fused
+    kernel keeps a running max in VMEM and requantizes; the sim takes one
+    extra reduction pass).  Calibrated layers (Algorithm 1) have exact
+    registers and skip this.  Shared by the jnp scan path and the Pallas
+    backend so both quantize on the identical grid."""
+    a_g = _group(a, cfg.xbar, axis=a.ndim - 1)          # (..., G, X)
+    w_g = _group(w, cfg.xbar, axis=0)                   # (G, X, N)
+    a_g = jnp.moveaxis(a_g, -2, 0)                      # (G, ..., X)
+
+    def mx(c, gw):
+        ag, wg = gw
+        p = jnp.einsum("...x,xn->...n", ag, wg,
+                       preferred_element_type=jnp.float32)
+        return jnp.maximum(c, jnp.max(jnp.abs(p))), None
+
+    vmax, _ = jax.lax.scan(mx, jnp.float32(0.0), (a_g, w_g))
+    span = vmax / jnp.asarray(grid, jnp.float32)
+    reach = 2.0 ** (trq.n_r2 + trq.m)
+    scale = jnp.maximum(span / reach, 1e-6)
+    return trq.replace(delta_r1=trq.delta_r1 * scale)
+
+
 def fake_quant_mvm(a: jax.Array, w: jax.Array, trq: TRQParams,
                    a_scale, w_scale, cfg: PimConfig = PimConfig(),
-                   ste: bool = False, auto_range: bool = False):
+                   ste: bool = False, auto_range: bool = False,
+                   with_ops: bool = False):
     """Fast per-group abstraction (paper §III-B: the quantizer *is* the
     behavioral abstraction of A/D conversion at the BLs).
 
@@ -142,40 +168,36 @@ def fake_quant_mvm(a: jax.Array, w: jax.Array, trq: TRQParams,
 
     a: (..., K) float;  w: (K, N) float;  scales map partial sums onto the
     ADC integer grid.  ``ste=True`` makes it differentiable (QAT-style).
+    ``with_ops=True`` additionally returns the total A/D operations (SAR
+    comparator cycles, f32 scalar, Eq. 6) spent on the G conversions behind
+    every output element.
     """
+    grid = jnp.asarray(a_scale * w_scale, a.dtype)
+    if auto_range:
+        trq = auto_range_fit(a, w, trq, grid, cfg)
+
     a_g = _group(a, cfg.xbar, axis=a.ndim - 1)          # (..., G, X)
     w_g = _group(w, cfg.xbar, axis=0)                   # (G, X, N)
     a_g = jnp.moveaxis(a_g, -2, 0)                      # (G, ..., X)
-    grid = jnp.asarray(a_scale * w_scale, a.dtype)
 
-    if auto_range:
-        # uncalibrated layers: set delta_r1 so the coarse range
-        # 2^(n_r2+m)*delta_r1 covers the observed |psum| max (the fused
-        # kernel keeps a running max in VMEM and requantizes; the sim takes
-        # one extra reduction pass).  Calibrated layers (Algorithm 1) have
-        # exact registers and skip this.
-        def mx(c, gw):
-            ag, wg = gw
-            p = jnp.einsum("...x,xn->...n", ag, wg,
-                           preferred_element_type=jnp.float32)
-            return jnp.maximum(c, jnp.max(jnp.abs(p))), None
-        vmax, _ = jax.lax.scan(mx, jnp.float32(0.0), (a_g, w_g))
-        span = vmax / jnp.asarray(grid, jnp.float32)
-        reach = 2.0 ** (trq.n_r2 + trq.m)
-        scale = jnp.maximum(span / reach, 1e-6)
-        trq = trq.replace(delta_r1=trq.delta_r1 * scale)
-
-    def body(acc, gw):
+    def body(carry, gw):
+        acc, ops = carry
         ag, wg = gw
         p = jnp.einsum("...x,xn->...n", ag, wg,
                        preferred_element_type=jnp.float32)
-        q = (trq_quant(p / grid, trq) * grid).astype(a.dtype)
+        scaled = p / grid
+        q = (trq_quant(scaled, trq) * grid).astype(a.dtype)
         p = p.astype(a.dtype)
         if ste:
             q = p + jax.lax.stop_gradient(q - p)
-        return acc + q, None
+        if with_ops:
+            ops = ops + jnp.sum(jax.lax.stop_gradient(
+                trq_ad_ops(scaled, trq)).astype(jnp.float32))
+        return (acc + q, ops), None
 
     out_shape = a.shape[:-1] + (w.shape[1],)
     acc0 = jnp.zeros(out_shape, a.dtype)
-    acc, _ = jax.lax.scan(body, acc0, (a_g, w_g))
+    (acc, ops), _ = jax.lax.scan(body, (acc0, jnp.float32(0.0)), (a_g, w_g))
+    if with_ops:
+        return acc, ops
     return acc

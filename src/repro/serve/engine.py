@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quant_state import QuantState, use_quant_state
+
 
 @dataclasses.dataclass
 class Request:
@@ -70,12 +72,17 @@ class ServeEngine:
     def __init__(self, cfg, apply_fn, cache_fn, params, *,
                  max_batch: int = 8, max_len: int = 512,
                  extra_inputs: Optional[Callable[[int, int], dict]] = None,
+                 quant_state: Optional[QuantState] = None,
                  rng_seed: int = 0):
         self.cfg = cfg
         self.apply_fn = apply_fn
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        # per-layer SAR registers (Algorithm-1 output): installed around
+        # every prefill/decode trace so each pim_linear resolves its own
+        # calibrated TRQParams instead of the global cfg.trq default
+        self.quant_state = quant_state
         # extra_inputs(batch, seq) -> dict of extra batch entries (modality
         # stubs: 'embeds' for vlm/audio frontends)
         self.extra_inputs = extra_inputs or (lambda b, s: {})
@@ -106,18 +113,20 @@ class ServeEngine:
 
     def _prefill_step(self, params, tokens, extra, plen: int):
         """tokens: (1, plen_padded); returns (last_logits, batch=1 cache)."""
-        cache = self._prefill_cache_fn(1, self.max_len)
-        batch = {"tokens": tokens, **extra}
-        logits, cache, _ = self.apply_fn(params, batch, cache=cache,
-                                         mode="prefill")
-        return logits[:, -1], cache
+        with use_quant_state(self.quant_state):
+            cache = self._prefill_cache_fn(1, self.max_len)
+            batch = {"tokens": tokens, **extra}
+            logits, cache, _ = self.apply_fn(params, batch, cache=cache,
+                                             mode="prefill")
+            return logits[:, -1], cache
 
     def _decode_step(self, params, cache, tokens, extra):
         """tokens: (max_batch, 1); one token for every slot."""
-        batch = {"tokens": tokens, **extra}
-        logits, cache, _ = self.apply_fn(params, batch, cache=cache,
-                                         mode="decode")
-        return logits[:, -1], cache
+        with use_quant_state(self.quant_state):
+            batch = {"tokens": tokens, **extra}
+            logits, cache, _ = self.apply_fn(params, batch, cache=cache,
+                                             mode="decode")
+            return logits[:, -1], cache
 
     def _sample(self, logits: jax.Array, temps: np.ndarray) -> np.ndarray:
         self._key, k = jax.random.split(self._key)

@@ -142,7 +142,7 @@ def test_pim_fake_quant_mode_close_to_exact():
     batch = _batch(cfg)
     exact, _, _ = apply_fn(params, batch, mode="train")
 
-    cfg_q = cfg.replace(pim_mode="fake_quant")
+    cfg_q = cfg.replace(pim_backend="fake_quant")
     _, apply_q, _ = build_model(cfg_q)
     quant, _, _ = apply_q(params, batch, mode="train")
     # logits correlate strongly (not exact — ADC quantization is real)
