@@ -1,0 +1,115 @@
+"""Benchmark regression gate: compare a fresh BENCH_*.json against the
+baseline committed at the repo root.
+
+  python -m benchmarks.check_regression --fresh out/BENCH_serve.json \
+      --baseline BENCH_serve.json [--threshold 0.25] [--seed-missing]
+
+Rules
+-----
+* Metrics are matched by dotted path into the JSON.  Direction is inferred
+  from the name: ``tokens_per_s`` is higher-is-better; ``*_s``/``*_ms``/
+  ``us``/``wall`` and ``*ad_ops*`` are lower-is-better.
+* Deterministic conversion counts (``*ad_ops*``) gate at ``--threshold``
+  (default 25% — the paper-relevant trajectory must not silently inflate).
+* Wall-clock metrics gate at ``--timing-threshold`` (default 2.0 = 200%):
+  CPU interpret-mode timings on shared CI runners jitter far beyond 25%,
+  so the tight gate is reserved for counts while timings only catch
+  order-of-magnitude cliffs.  Tighten per-run if your runners are quiet.
+* ``--seed-missing``: if the baseline file does not exist, copy the fresh
+  result into place and exit 0 — the first CI run seeds the trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+def flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(tree, (int, float)) and not isinstance(tree, bool):
+        out[prefix[:-1]] = float(tree)
+    return out
+
+
+def _is_timing(leaf: str) -> bool:
+    return (leaf.endswith(("_s", "_ms")) or leaf == "us"
+            or "wall" in leaf or "ttft" in leaf or "latency" in leaf)
+
+
+def classify(path: str):
+    """-> (direction, kind) where direction +1 = higher-is-better."""
+    leaf = path.rsplit(".", 1)[-1]
+    if "tokens_per_s" in leaf:
+        return +1, "timing"    # wall-clock-derived: loose gate, more = better
+    if "saved_frac" in leaf or "reused" in leaf:
+        return +1, "count"     # deterministic reuse counters
+    if "ad_ops" in leaf or "ad_energy" in leaf:
+        return -1, "count"
+    if _is_timing(leaf):
+        return -1, "timing"
+    return 0, "info"       # requests, decode_tokens, flags: not gated
+
+
+def compare(fresh: dict, base: dict, threshold: float,
+            timing_threshold: float) -> list:
+    failures = []
+    f_flat, b_flat = flatten(fresh), flatten(base)
+    for path, b_val in sorted(b_flat.items()):
+        if path not in f_flat:
+            failures.append(f"missing metric in fresh result: {path}")
+            continue
+        direction, kind = classify(path)
+        if direction == 0 or kind == "info":
+            continue
+        thr = timing_threshold if kind == "timing" else threshold
+        f_val = f_flat[path]
+        if b_val == 0:
+            continue
+        rel = (f_val - b_val) / abs(b_val)
+        regressed = rel > thr if direction < 0 else rel < -thr
+        if regressed:
+            failures.append(
+                f"{path}: {b_val:.6g} -> {f_val:.6g} "
+                f"({rel:+.1%}, {kind} gate ±{thr:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--threshold", type=float, default=0.25)
+    ap.add_argument("--timing-threshold", type=float, default=2.0)
+    ap.add_argument("--seed-missing", action="store_true")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        if args.seed_missing:
+            shutil.copy(args.fresh, args.baseline)
+            print(f"seeded baseline {args.baseline} from {args.fresh}")
+            return 0
+        print(f"baseline {args.baseline} missing (use --seed-missing)")
+        return 1
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    failures = compare(fresh, base, args.threshold, args.timing_threshold)
+    if failures:
+        print(f"REGRESSION vs {args.baseline}:")
+        for line in failures:
+            print(f"  {line}")
+        return 1
+    n = len([p for p in flatten(base) if classify(p)[0] != 0])
+    print(f"ok: {n} gated metrics within threshold vs {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

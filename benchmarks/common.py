@@ -2,7 +2,6 @@
 helpers, CSV emit."""
 from __future__ import annotations
 
-import functools
 import os
 import pickle
 import time

@@ -6,7 +6,6 @@ classification per layer."""
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core.distribution import classify
 from repro.models.cnn import pim_forward

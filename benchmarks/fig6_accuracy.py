@@ -8,12 +8,10 @@ from __future__ import annotations
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.core.calibrate import calibrate_layer
 from repro.core.trq import make_params
 from repro.models.cnn import apply_cnn, pim_forward
-from repro.core.energy import R_ADC_DEFAULT
 
 from .common import accuracy, emit, trained_cnn
 

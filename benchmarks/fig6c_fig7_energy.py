@@ -5,12 +5,8 @@ The paper's headline: ADC dynamic energy compressed to 42–62% (1.6–2.3x)
 across workloads, at the 4-bit upper bound used for Fig. 7."""
 from __future__ import annotations
 
-import numpy as np
-import jax.numpy as jnp
-
 from repro.core.calibrate import calibrate_layer
-from repro.core.energy import (R_ADC_DEFAULT, model_adc_ratio, layer_report,
-                               system_power_breakdown)
+from repro.core.energy import system_power_breakdown
 from repro.models.cnn import pim_forward
 
 from .common import emit, trained_cnn

@@ -18,7 +18,17 @@ from repro.pim.crossbar import bit_exact_mvm, fake_quant_mvm
 from .common import emit, timeit
 
 
-def run(quick: bool = False) -> None:
+def run(quick: bool = False) -> dict:
+    """Prints the CSV lines and returns JSON-ready records:
+    ``{name: {"us": float, "derived": str, "mean_ad_ops": float?}}`` —
+    the kernels lane of the CI regression gate (mean_ad_ops is
+    deterministic; the interpret-mode timings are trajectory-only)."""
+    records: dict = {}
+
+    def rec(name, us, derived="", **extra):
+        emit(name, us, derived)
+        records[name] = {"us": float(us), "derived": derived, **extra}
+
     rng = np.random.default_rng(0)
     p = make_params(delta_r1=1.0, n_r1=4, n_r2=4, m=3, signed=True)
 
@@ -26,8 +36,8 @@ def run(quick: bool = False) -> None:
     us = timeit(lambda v: trq_quant_pallas(v, p, interpret=True), x,
                 iters=3 if quick else 5)
     us_ref = timeit(lambda v: trq_quant(v, p), x, iters=3 if quick else 5)
-    emit("kernel.trq_quant.pallas_interp", us, "shape=256x256")
-    emit("kernel.trq_quant.jnp_oracle", us_ref, "shape=256x256")
+    rec("kernel.trq_quant.pallas_interp", us, "shape=256x256")
+    rec("kernel.trq_quant.jnp_oracle", us_ref, "shape=256x256")
 
     a = jnp.asarray(rng.normal(0, 1, (128, 512)).astype(np.float32))
     w = jnp.asarray(rng.normal(0, 1, (512, 128)).astype(np.float32))
@@ -36,8 +46,8 @@ def run(quick: bool = False) -> None:
                 a, w, iters=2 if quick else 4)
     us_ref = timeit(lambda aa, ww: fake_quant_mvm(aa, ww, p, 0.05, 1.0),
                     a, w, iters=2 if quick else 4)
-    emit("kernel.trq_group_mvm.pallas_interp", us, "m128.k512.n128")
-    emit("kernel.trq_group_mvm.jnp_oracle", us_ref, "m128.k512.n128")
+    rec("kernel.trq_group_mvm.pallas_interp", us, "m128.k512.n128")
+    rec("kernel.trq_group_mvm.jnp_oracle", us_ref, "m128.k512.n128")
 
     ai = jnp.asarray(rng.integers(0, 256, (16, 128)).astype(np.int32))
     wi = jnp.asarray(rng.integers(-128, 128, (128, 16)).astype(np.int32))
@@ -45,8 +55,8 @@ def run(quick: bool = False) -> None:
                 ai, wi, iters=2 if quick else 3)
     us_ref = timeit(lambda aa, ww: bit_exact_mvm(aa, ww, p), ai, wi,
                     iters=2 if quick else 3)
-    emit("kernel.xbar_mvm.pallas_interp", us, "m16.k128.n16.8x8planes")
-    emit("kernel.xbar_mvm.jnp_oracle", us_ref, "m16.k128.n16.8x8planes")
+    rec("kernel.xbar_mvm.pallas_interp", us, "m16.k128.n16.8x8planes")
+    rec("kernel.xbar_mvm.jnp_oracle", us_ref, "m16.k128.n16.8x8planes")
 
     # -- registered-backend sweep: one shape, every datapath ---------------
     # same MVM through the whole repro.pim.backend registry so BENCH_*.json
@@ -71,8 +81,32 @@ def run(quick: bool = False) -> None:
         mean_ops = float(out.ad_ops) / conv
         note = (f"m{aa.shape[0]}.k{aa.shape[1]}.n{ww.shape[1]}"
                 if small else shape_note)
-        emit(f"backend.{name}.mvm", us, f"{note}.mean_ad_ops={mean_ops:.2f}")
+        rec(f"backend.{name}.mvm", us,
+            f"{note}.mean_ad_ops={mean_ops:.2f}", mean_ad_ops=mean_ops)
+    return records
+
+
+def main(argv=None) -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the records as JSON "
+                         "(e.g. BENCH_kernels.json)")
+    args = ap.parse_args(argv)
+    records = run(args.quick)
+    if args.json:
+        import os
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"bench": "kernels", "quick": args.quick,
+                       "records": records}, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return 0
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    sys.exit(main())

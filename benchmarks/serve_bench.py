@@ -1,0 +1,166 @@
+"""Serving benchmark: drives the paged ServeEngine over synthetic
+multi-tenant traces and records the perf/energy trajectory.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--quick] \
+      [--out BENCH_serve.json]
+
+Three scenarios (the units CI regression-gates on):
+
+* ``shared_prefix_chat`` — N chat requests sharing a long system prompt;
+  run twice (prefix reuse on/off) so the A/D-conversion saving of
+  hash-consed prefix pages is a recorded number, not a claim.
+* ``long_context``      — few requests, prompts near max_len (paging
+  pressure: most pool pages live).
+* ``mixed_archs``       — one small trace per architecture family
+  (attention / rwkv / enc-dec) through the same engine code.
+
+Every scenario records tokens/s, mean TTFT, and per-request mean A/D ops +
+energy (Eq. 6) from the engine's per-request metering.  Timings on CI
+runners are noisy — the deterministic conversion counts are the
+paper-relevant trajectory; see benchmarks/check_regression.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def _build(arch, backend="fake_quant"):
+    import jax
+    import jax.numpy as jnp
+    from repro.models.registry import build_model, get_config
+
+    cfg = get_config(arch, smoke=True).replace(remat="none",
+                                               pim_backend=backend)
+    init_fn, apply_fn, cache_fn = build_model(cfg)
+    params = init_fn(jax.random.PRNGKey(0))
+
+    def extra_inputs(b, s):
+        if (cfg.frontend in ("patch", "frames") or cfg.encoder_layers > 0) \
+                and s > 1:
+            return {"embeds": jnp.zeros((b, 8, cfg.d_model), jnp.float32)}
+        return {}
+
+    return cfg, apply_fn, cache_fn, params, extra_inputs
+
+
+def _serve(built, prompts, *, max_new, max_batch=2, max_len=128,
+           reuse=True, block_size=16):
+    from repro.serve.engine import ServeEngine
+
+    cfg, apply_fn, cache_fn, params, extra_inputs = built
+    eng = ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=max_batch,
+                      max_len=max_len, paged=True, block_size=block_size,
+                      prefix_reuse=reuse, extra_inputs=extra_inputs)
+    t0 = time.perf_counter()
+    for p in prompts:
+        eng.submit(p, max_new_tokens=max_new)
+    eng.run()
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    return {
+        "requests": st["requests"],
+        "decode_tokens": st["decode_tokens"],
+        "tokens_per_s": st["tokens_per_s"],
+        "mean_ttft_s": st["mean_ttft_s"],
+        "total_ad_ops": st["total_ad_ops"],
+        "prefill_ad_ops": st["prefill_ad_ops"],
+        "mean_ad_ops_per_request": st["mean_ad_ops_per_request"],
+        "mean_ad_energy_pj_per_request": st["mean_ad_energy_pj_per_request"],
+        "reused_prompt_tokens": st["reused_prompt_tokens"],
+        "wall_s": wall,
+    }
+
+
+def shared_prefix_chat(quick: bool) -> dict:
+    n_req = 4 if quick else 8
+    built = _build("llama3.2-3b")
+    cfg = built[0]
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, 40)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size, 12)])
+               for _ in range(n_req)]
+    max_new = 4 if quick else 8
+    with_reuse = _serve(built, prompts, max_new=max_new, reuse=True)
+    no_reuse = _serve(built, prompts, max_new=max_new, reuse=False)
+    assert with_reuse["total_ad_ops"] < no_reuse["total_ad_ops"], \
+        "prefix reuse must strictly reduce total A/D conversions"
+    with_reuse["no_reuse_total_ad_ops"] = no_reuse["total_ad_ops"]
+    with_reuse["reuse_ad_ops_saved_frac"] = \
+        1.0 - with_reuse["total_ad_ops"] / no_reuse["total_ad_ops"]
+    return with_reuse
+
+
+def long_context(quick: bool) -> dict:
+    built = _build("llama3.2-3b")
+    cfg = built[0]
+    rng = np.random.default_rng(1)
+    n_req = 2 if quick else 4
+    prompts = [rng.integers(0, cfg.vocab_size, 100) for _ in range(n_req)]
+    return _serve(built, prompts, max_new=4 if quick else 8,
+                  max_len=128, reuse=True)
+
+
+def mixed_archs(quick: bool) -> dict:
+    archs = ["llama3.2-3b", "rwkv6-7b"] if quick else \
+        ["llama3.2-3b", "rwkv6-7b", "whisper-medium"]
+    out = {"archs": {}}
+    tps, ops = [], []
+    for arch in archs:
+        built = _build(arch)
+        rng = np.random.default_rng(2)
+        prompts = [rng.integers(0, built[0].vocab_size, n)
+                   for n in (12, 24, 7)]
+        rec = _serve(built, prompts, max_new=3 if quick else 6, max_len=64)
+        out["archs"][arch] = rec
+        tps.append(rec["tokens_per_s"])
+        ops.append(rec["mean_ad_ops_per_request"])
+    out["tokens_per_s"] = float(np.mean(tps))
+    out["mean_ad_ops_per_request"] = float(np.mean(ops))
+    return out
+
+
+SCENARIOS = {
+    "shared_prefix_chat": shared_prefix_chat,
+    "long_context": long_context,
+    "mixed_archs": mixed_archs,
+}
+
+
+def run(quick: bool = False, only=None) -> dict:
+    report = {"bench": "serve", "quick": quick, "scenarios": {}}
+    for name, fn in SCENARIOS.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        report["scenarios"][name] = fn(quick)
+        report["scenarios"][name]["suite_wall_s"] = time.time() - t0
+        print(f"serve_bench.{name},"
+              f"{report['scenarios'][name]['suite_wall_s']*1e6:.0f},ok")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list of scenario names")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    report = run(args.quick, only)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

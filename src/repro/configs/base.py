@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Optional, Tuple
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,7 +8,6 @@ No retraining — only calibration samples of each layer's BL outputs.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Mapping, Optional, Sequence
 
 import jax
@@ -16,8 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .distribution import DistributionInfo, classify, r_ideal_bits
-from .energy import R_ADC_DEFAULT, mean_ops_trq, mean_ops_uniform
-from .trq import TRQParams, make_params, quant_mse, trq_quant
+from .energy import R_ADC_DEFAULT, mean_ops_trq
+from .trq import TRQParams, make_params, quant_mse
 
 MAX_CALIB_SAMPLES = 65536
 

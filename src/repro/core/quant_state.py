@@ -23,7 +23,7 @@ import dataclasses
 import json
 import os
 import re
-from typing import Any, Mapping, Optional, Sequence
+from typing import Any, Mapping, Optional
 
 import jax
 import numpy as np

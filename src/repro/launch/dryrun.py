@@ -36,8 +36,8 @@ import jax
 
 from repro.configs.base import SHAPES
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import (build_cell, depth_variant, input_specs,
-                                skip_reason, valid_cells)
+from repro.launch.steps import (build_cell, depth_variant, skip_reason,
+                                valid_cells)
 from repro.models.registry import ARCHS, get_config
 from repro.telemetry.hlo import collective_bytes
 from repro.telemetry.roofline import model_flops, roofline

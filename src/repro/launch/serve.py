@@ -1,7 +1,7 @@
-"""Batched serving driver (continuous batching engine).
+"""Batched serving driver (continuous batching over the paged KV cache).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \
-      --requests 16 --max-new 24 --pim fake_quant
+      --requests 16 --max-new 24 --pim fake_quant --energy-report
 
 Serving runs the paper's deployment datapath: with ``--pim fake_quant``
 (or ``--pim pallas`` for the fused kernel) every linear layer's partial
@@ -9,6 +9,12 @@ sums pass through the calibrated TRQ quantizer (the behavioral SAR-ADC),
 exactly the configuration the energy claims are made for.  ``--quant-state
 path/to/quant_state.json`` installs Algorithm-1 per-layer SAR registers;
 without it every layer auto-ranges the model-wide default.
+
+The KV cache is paged (``--block-size`` tokens per page) with hash-consed
+shared-prefix pages — ``--shared-prefix N`` prepends the same N-token
+system prompt to every request so the reuse path is visible in the report;
+``--no-paged`` / ``--no-prefix-reuse`` fall back for A/B runs.
+``--energy-report`` prints the per-request A/D-conversion/energy table.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import ARCHS, build_model, get_config
 from repro.serve.engine import ServeEngine
+from repro.telemetry.serve_report import format_energy_report, serve_report
 
 
 def main(argv=None):
@@ -34,6 +41,9 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend the same N-token system prompt to every "
+                         "request (exercises prefix reuse)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--pim", default="fake_quant",
                     choices=["exact", "fake_quant", "pallas", "bit_exact"],
@@ -41,6 +51,17 @@ def main(argv=None):
     ap.add_argument("--quant-state", default=None,
                     help="Algorithm-1 per-layer registers "
                          "(quant_state.json or its checkpoint dir)")
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=True, help="paged KV cache (block pool)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV page")
+    ap.add_argument("--prefix-reuse", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="hash-cons shared prompt-prefix pages")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="pool size in pages (default: slots + headroom)")
+    ap.add_argument("--energy-report", action="store_true",
+                    help="print the per-request A/D-energy table")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -55,27 +76,42 @@ def main(argv=None):
     init_fn, apply_fn, cache_fn = build_model(cfg)
     rng = np.random.default_rng(args.seed)
     print(f"arch={cfg.name} pim={cfg.pim_backend} "
-          f"max_batch={args.max_batch} max_len={args.max_len}")
+          f"max_batch={args.max_batch} max_len={args.max_len} "
+          f"paged={args.paged} block_size={args.block_size} "
+          f"prefix_reuse={args.prefix_reuse}")
 
     def extra_inputs(b, s):
         out = {}
-        if cfg.frontend in ("patch", "frames") and s > 1:
+        if (cfg.frontend in ("patch", "frames") or cfg.encoder_layers > 0) \
+                and s > 1:
             out["embeds"] = jnp.zeros((b, 8, cfg.d_model), jnp.float32)
         return out
+
+    prefix = rng.integers(0, cfg.vocab_size, args.shared_prefix) \
+        if args.shared_prefix else None
 
     with use_mesh(mesh):
         params = init_fn(jax.random.PRNGKey(args.seed))
         engine = ServeEngine(cfg, apply_fn, cache_fn, params,
                              max_batch=args.max_batch, max_len=args.max_len,
-                             extra_inputs=extra_inputs, quant_state=qs)
+                             extra_inputs=extra_inputs, quant_state=qs,
+                             paged=args.paged, block_size=args.block_size,
+                             prefix_reuse=args.prefix_reuse,
+                             num_blocks=args.num_blocks)
         for _ in range(args.requests):
-            engine.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
-                          max_new_tokens=args.max_new,
+            tail = rng.integers(0, cfg.vocab_size, args.prompt_len)
+            prompt = tail if prefix is None else np.concatenate([prefix,
+                                                                 tail])
+            engine.submit(prompt, max_new_tokens=args.max_new,
                           temperature=args.temperature)
         done = engine.run()
     st = engine.stats()
     print(f"served {st['requests']} requests, {st['decode_tokens']} tokens, "
-          f"{st['tokens_per_s']:.1f} tok/s, ttft {st['mean_ttft_s']*1e3:.0f}ms")
+          f"{st['tokens_per_s']:.1f} tok/s, ttft {st['mean_ttft_s']*1e3:.0f}ms, "
+          f"{st['total_ad_ops']:.3e} A/D ops "
+          f"({st['total_ad_energy_pj']/1e6:.3f} uJ)")
+    if args.energy_report:
+        print(format_energy_report(serve_report(engine)))
     for r in done[:3]:
         print(f"  req {r.uid}: {list(r.generated)[:8]}...")
     return 0

@@ -19,10 +19,7 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import TrainConfig
 from repro.data.synthetic import TokenStream
 from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh

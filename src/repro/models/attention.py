@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.trq import TRQParams
 from repro.dist.sharding import shard
-from .layers import apply_rope, cdtype, init_linear, pim_linear
+from .layers import apply_rope, init_linear, pim_linear
 
 NEG_INF = -1e30
 
@@ -57,15 +57,21 @@ def _group_q(q: jax.Array, n_kv: int) -> jax.Array:
     return q.reshape(b, s, n_kv, h // n_kv, hd)
 
 
-def full_attention(q, k, v, causal: bool, q_off: int = 0) -> jax.Array:
-    """Reference path for short sequences. q: (B,Sq,KV,G,hd), k/v: (B,Sk,KV,hd)."""
+def full_attention(q, k, v, causal: bool, q_off=0) -> jax.Array:
+    """Reference path for short sequences. q: (B,Sq,KV,G,hd), k/v: (B,Sk,KV,hd).
+
+    ``q_off`` shifts the causal mask by the absolute position of q row 0 —
+    a python int, or a (B,) array for per-row offsets (continued prefill
+    against a cache holding ``q_off`` earlier tokens)."""
     scale = q.shape[-1] ** -0.5
     s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32) * scale,
                    k.astype(jnp.float32))
     if causal:
         sq, sk = q.shape[1], k.shape[1]
-        mask = (jnp.arange(sq)[:, None] + q_off) >= jnp.arange(sk)[None, :]
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        off = jnp.asarray(q_off, jnp.int32).reshape(-1, 1, 1)     # (B|1,1,1)
+        mask = (jnp.arange(sq)[None, :, None] + off) >= \
+            jnp.arange(sk)[None, None, :]                         # (B|1,Sq,Sk)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
     a = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", a, v.astype(jnp.float32))
     return o.astype(q.dtype)
@@ -148,11 +154,16 @@ def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
 
 def apply_attention(p, x, cfg: ModelConfig, positions, *, causal=True,
                     cache: Optional[dict] = None, trq: Optional[TRQParams] = None,
-                    rope: bool = True, prefix: str = "attn"):
+                    rope: bool = True, cont: bool = False,
+                    prefix: str = "attn"):
     """Returns (out, new_cache).  cache=None -> stateless (training).
 
     Prefill (x seq > 1 with cache) writes k/v at [0, S); decode (seq == 1)
-    scatters at position cache['len']."""
+    scatters at position cache['len'].  ``cont`` (continued prefill, the
+    prefix-reuse path) instead appends the s new tokens at cache['len'] and
+    attends over the WHOLE cache buffer — callers pass a buffer trimmed to
+    len+s so the softmax reduction has exactly the same extent as the
+    monolithic prefill it replaces (bitwise parity; see serve/engine.py)."""
     b, s, _ = x.shape
     q, k, v = _qkv(p, x, cfg, positions, trq, rope=rope, prefix=prefix)
     qg = _group_q(q, cfg.n_kv_heads)
@@ -167,7 +178,13 @@ def apply_attention(p, x, cfg: ModelConfig, positions, *, causal=True,
     new_cache = None
     ck = min(s, cfg.attn_chunk_k)
 
-    if cache is None:
+    if cont and cache is not None and s > 1:
+        idx = cache["len"]                     # (B,) tokens already resident
+        k_cache = _scatter_time(cache["k"], k, idx)
+        v_cache = _scatter_time(cache["v"], v, idx)
+        new_cache = {"k": k_cache, "v": v_cache, "len": idx + s}
+        o = full_attention(qg, k_cache, v_cache, causal, q_off=idx)
+    elif cache is None:
         if s > cfg.attn_chunk_q and s % cfg.attn_chunk_q == 0 and \
                 s % ck == 0:
             o = chunked_attention(qg, k, v, causal, cfg.attn_chunk_q,

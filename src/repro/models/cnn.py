@@ -19,9 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.trq import TRQParams
 from repro.pim.crossbar import PimConfig, bit_exact_mvm
-from repro.pim.mapping import conv2d_pim, conv2d_bl_samples, im2col, map_conv2d, map_linear
+from repro.pim.mapping import conv2d_pim, conv2d_bl_samples, map_conv2d, map_linear
 
 
 # ---------------------------------------------------------------------------
@@ -91,7 +90,6 @@ RESNET20 = CNNSpec("resnet20", _resnet20_layers(), 32, 3, 10)
 
 def init_cnn(key, spec: CNNSpec):
     params = {}
-    i = 0
     for li, l in enumerate(spec.layers):
         if l[0] == "conv":
             key, k2 = jax.random.split(key)
@@ -260,7 +258,6 @@ def uniform_conversions(q: QuantizedCNN, n_images: int,
     """Total A/D conversions per ``n_images`` inferences (Eq. 4), for the
     energy baseline."""
     total = 0
-    hw = {name: None for name in q.pim_layers}
     # walk shapes symbolically
     x_hw, ch = q.spec.input_hw, q.spec.in_ch
     for li, l in enumerate(q.spec.layers):

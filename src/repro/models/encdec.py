@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import shard
+from repro.pim.backend import reemit_ad_ops, traced_ad_ops
 from .attention import (apply_attention, apply_cross_attention, encoder_kv,
                         init_attention, init_cross_attention)
 from .layers import (cdtype, embed, init_embed, init_linear, init_mlp,
@@ -72,25 +73,35 @@ def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
 
-    def body(x_, lp):
-        h = layernorm(lp["ln1"], x_, cfg.norm_eps)
-        o, _ = apply_attention(lp["attn"], h, cfg, positions, causal=False,
-                               rope=False, prefix="enc/attn")
-        x_ = x_ + o
-        h = layernorm(lp["ln2"], x_, cfg.norm_eps)
-        x_ = x_ + apply_mlp(lp["mlp"], h, cfg, prefix="enc/mlp")
-        return shard(x_, "batch", "seq", None), None
+    def body(carry, lp):
+        x_, ops_ = carry
+        with traced_ad_ops() as tally:
+            h = layernorm(lp["ln1"], x_, cfg.norm_eps)
+            o, _ = apply_attention(lp["attn"], h, cfg, positions,
+                                   causal=False, rope=False,
+                                   prefix="enc/attn")
+            x_ = x_ + o
+            h = layernorm(lp["ln2"], x_, cfg.norm_eps)
+            x_ = x_ + apply_mlp(lp["mlp"], h, cfg, prefix="enc/mlp")
+        return (shard(x_, "batch", "seq", None), ops_ + tally.value), None
 
     body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
-    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    (x, ops), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)), params["enc"])
+    reemit_ad_ops(ops)
     return layernorm(params["enc_norm"], x, cfg.norm_eps)
 
 
 def cross_kv(params, enc_out: jax.Array, cfg: ModelConfig):
     """Per-decoder-layer cross KV, stacked on the layer axis."""
     def one(lp):
-        return encoder_kv(lp["xattn"], enc_out, cfg, prefix="dec/xattn")
-    return jax.vmap(one, in_axes=0, out_axes=0)(params["dec"])
+        # per-layer tally: the pim_linear emissions are vmap-trace tracers,
+        # returned as a stacked (L,) leaf and re-emitted reduced
+        with traced_ad_ops() as tally:
+            kv = encoder_kv(lp["xattn"], enc_out, cfg, prefix="dec/xattn")
+        return kv, tally.value
+    kv, ops = jax.vmap(one, in_axes=0, out_axes=0)(params["dec"])
+    reemit_ad_ops(jnp.sum(ops))
+    return kv
 
 
 def decode_stack(params, tokens: jax.Array, enc_out: Optional[jax.Array],
@@ -111,24 +122,26 @@ def decode_stack(params, tokens: jax.Array, enc_out: Optional[jax.Array],
         xkv = cross_kv(params, enc_out, cfg)
 
     def body(carry, inputs):
-        x_, = carry
+        x_, ops_ = carry
         lp, lc, lxkv = inputs
-        h = layernorm(lp["ln1"], x_, cfg.norm_eps)
-        o, nc = apply_attention(lp["attn"], h, cfg, positions,
-                                cache=lc, rope=False, prefix="dec/attn")
-        x_ = x_ + o
-        h = layernorm(lp["ln_x"], x_, cfg.norm_eps)
-        x_ = x_ + apply_cross_attention(lp["xattn"], h, lxkv, cfg,
-                                        prefix="dec/xattn")
-        h = layernorm(lp["ln2"], x_, cfg.norm_eps)
-        x_ = x_ + apply_mlp(lp["mlp"], h, cfg, prefix="dec/mlp")
+        with traced_ad_ops() as tally:
+            h = layernorm(lp["ln1"], x_, cfg.norm_eps)
+            o, nc = apply_attention(lp["attn"], h, cfg, positions,
+                                    cache=lc, rope=False, prefix="dec/attn")
+            x_ = x_ + o
+            h = layernorm(lp["ln_x"], x_, cfg.norm_eps)
+            x_ = x_ + apply_cross_attention(lp["xattn"], h, lxkv, cfg,
+                                            prefix="dec/xattn")
+            h = layernorm(lp["ln2"], x_, cfg.norm_eps)
+            x_ = x_ + apply_mlp(lp["mlp"], h, cfg, prefix="dec/mlp")
         x_ = shard(x_, "batch", "seq", None)
-        return (x_,), (nc if lc is not None else 0)
+        return (x_, ops_ + tally.value), (nc if lc is not None else 0)
 
     body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
     layer_cache = cache["layers"] if cache is not None else None
-    (x,), new_layer_cache = jax.lax.scan(
-        body_fn, (x,), (params["dec"], layer_cache, xkv))
+    (x, ops), new_layer_cache = jax.lax.scan(
+        body_fn, (x, jnp.float32(0)), (params["dec"], layer_cache, xkv))
+    reemit_ad_ops(ops)
 
     x = layernorm(params["dec_norm"], x, cfg.norm_eps)
     if mode in ("decode", "prefill"):
@@ -183,5 +196,16 @@ def apply_encdec(params, batch: dict, cfg: ModelConfig, *,
     logits, nc = decode_stack(params, batch["tokens"], None, cfg,
                               cache=inner, xkv=xkv, mode=mode)
     if nc is not None:
-        nc["xkv"] = xkv
+        # zero-pad the fresh cross-KV out to the cache's enc_len buffer so
+        # scattering it into a serving slot overwrites the WHOLE row —
+        # cross-attention reads the full buffer, and stale rows from a
+        # previous slot resident would pollute the softmax denominator
+        buf = cache["xkv"]["k"].shape[2]
+        pad = buf - xkv["k"].shape[2]
+        if pad > 0:
+            nc["xkv"] = jax.tree.map(
+                lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad),
+                                      (0, 0), (0, 0))), xkv)
+        else:
+            nc["xkv"] = xkv
     return logits, nc, jnp.float32(0)

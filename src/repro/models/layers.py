@@ -1,7 +1,6 @@
 """Shared layers: norms, embeddings, RoPE, PimLinear, MLP."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

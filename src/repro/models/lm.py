@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import shard
+from repro.pim.backend import reemit_ad_ops, traced_ad_ops
 from .attention import apply_attention, init_attention
 from .layers import cdtype, embed, init_embed, init_linear, init_mlp, \
     init_rmsnorm, apply_mlp, pim_linear, rmsnorm
@@ -103,7 +104,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 # ---------------------------------------------------------------------------
 
 def _apply_layer(p, x, cfg: ModelConfig, idx: int, positions,
-                 cache: Optional[dict], aux, depth0: int = 0):
+                 cache: Optional[dict], aux, depth0: int = 0,
+                 cont: bool = False):
     mixer, ffn = cfg.layer_kind(idx)
     # per-layer name prefix for QuantState register lookup.  idx is the
     # position inside the repeating period (static under the period scan),
@@ -115,7 +117,8 @@ def _apply_layer(p, x, cfg: ModelConfig, idx: int, positions,
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     if mixer == "attn":
         o, new_cache = apply_attention(p["attn"], h, cfg, positions,
-                                       cache=cache, prefix=f"{lname}/attn")
+                                       cache=cache, cont=cont,
+                                       prefix=f"{lname}/attn")
     elif mixer == "mamba":
         o, new_cache = apply_mamba(p["mamba"], h, cfg, cache=cache,
                                    prefix=f"{lname}/mamba")
@@ -161,7 +164,15 @@ def apply_lm(params, batch: dict, cfg: ModelConfig, *,
     """batch: {'tokens': (B,S) int32, optional 'embeds': (B,F,D),
     optional 'positions': (B,S)}.
 
+    Modes: train | prefill | decode | prefill_cont.  ``prefill_cont``
+    continues a prefill from a warm cache (prefix-reuse serving): the s
+    tokens append at cache['len'] instead of position 0, so callers must
+    supply absolute 'positions'.  Recurrent mixers (mamba/rwkv) continue
+    from the cached state on the ordinary prefill path already; only
+    attention needs the explicit flag.
+
     Returns (logits, new_cache, aux_loss)."""
+    cont = mode == "prefill_cont"
     x = _embed_inputs(params, batch, cfg).astype(cdtype(cfg))
     b, s, _ = x.shape
     x = shard(x, "batch", "seq", None)
@@ -173,16 +184,22 @@ def apply_lm(params, batch: dict, cfg: ModelConfig, *,
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
 
     def period_body(carry, inputs, depth0: int = 0):
-        x_, aux_ = carry
+        # the ops carry keeps per-layer A/D counts meterable through the
+        # period scan: pim_linear emissions inside this body are tracers of
+        # the scan trace, so they are drained into the carry here and
+        # re-emitted to the enclosing traced_ad_ops tally after the scan
+        x_, aux_, ops_ = carry
         pp, pc = inputs
         new_pc = {}
-        for i in range(cfg.period):
-            lp = pp[f"layer_{i}"]
-            lc = pc[f"layer_{i}"] if pc is not None else None
-            x_, nc, aux_ = _apply_layer(lp, x_, cfg, i, positions, lc, aux_,
-                                        depth0=depth0)
-            new_pc[f"layer_{i}"] = nc
-        return (x_, aux_), (new_pc if pc is not None else 0)
+        with traced_ad_ops() as tally:
+            for i in range(cfg.period):
+                lp = pp[f"layer_{i}"]
+                lc = pc[f"layer_{i}"] if pc is not None else None
+                x_, nc, aux_ = _apply_layer(lp, x_, cfg, i, positions, lc,
+                                            aux_, depth0=depth0, cont=cont)
+                new_pc[f"layer_{i}"] = nc
+        return (x_, aux_, ops_ + tally.value), \
+            (new_pc if pc is not None else 0)
 
     def wrap(fn):
         if cfg.remat not in ("block", "full", "names"):
@@ -197,23 +214,26 @@ def apply_lm(params, batch: dict, cfg: ModelConfig, *,
         return jax.checkpoint(fn, policy=policy)
 
     if cfg.scan_layers:
-        (x, aux), new_cache = jax.lax.scan(
-            wrap(period_body), (x, jnp.float32(0)), (params["periods"], cache))
+        (x, aux, ops), new_cache = jax.lax.scan(
+            wrap(period_body), (x, jnp.float32(0), jnp.float32(0)),
+            (params["periods"], cache))
     else:
         new_caches = []
         aux = jnp.float32(0)
+        ops = jnp.float32(0)
         for pi in range(cfg.n_periods):
             pp = jax.tree.map(lambda t: t[pi], params["periods"])
             pc = jax.tree.map(lambda t: t[pi], cache) if cache is not None else None
             body = wrap(functools.partial(period_body,
                                           depth0=pi * cfg.period))
-            (x, aux), nc = body((x, aux), (pp, pc))
+            (x, aux, ops), nc = body((x, aux, ops), (pp, pc))
             new_caches.append(nc)
         new_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *new_caches) \
             if cache is not None else 0
+    reemit_ad_ops(ops)
 
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    if mode in ("decode", "prefill"):
+    if mode in ("decode", "prefill", "prefill_cont"):
         # serving paths only need next-token logits; skipping the full-seq
         # lm_head matmul keeps 32k-prefill logits O(B·V), not O(B·S·V)
         x = x[:, -1:]

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.trq import TRQParams
 from repro.dist.sharding import shard
-from .layers import cdtype, pdtype, init_linear, pim_linear
+from .layers import pdtype, init_linear, pim_linear
 
 
 def d_inner(cfg: ModelConfig) -> int:
@@ -84,7 +84,6 @@ def ssm_scan(delta, xc, b_, c_, a_neg, h0, chunk: int):
     """Full selective scan.  delta/xc: (B,S,di); b_/c_: (B,S,ds); h0 state.
     Decay/drive tensors are formed per chunk inside the scan body."""
     b, s, di = delta.shape
-    ds = b_.shape[-1]
     nc = s // chunk
 
     def chunked(t):

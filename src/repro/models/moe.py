@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.trq import TRQParams
 from repro.dist.sharding import shard
-from .layers import cdtype, pdtype, init_linear
+from .layers import pdtype
 
 
 def init_moe(key, cfg: ModelConfig, d_ff: Optional[int] = None):

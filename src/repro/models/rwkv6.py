@@ -26,8 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.trq import TRQParams
-from repro.dist.sharding import shard
-from .layers import cdtype, pdtype, init_linear, pim_linear
+from .layers import pdtype, init_linear, pim_linear
 
 
 def _dims(cfg: ModelConfig):

@@ -18,7 +18,8 @@ from .crossbar import (PimConfig, auto_range_fit, bit_exact_mvm,
 from .mapping import LayerMapping, map_linear, map_conv2d, conv2d_pim, im2col
 from .backend import (PimOut, PimBackend, register_backend, get_backend,
                       list_backends, use_backend, active_backend, pim_mvm,
-                      ad_ops_tally, AdOpsTally)
+                      ad_ops_tally, AdOpsTally, traced_ad_ops, TracedAdOps,
+                      reemit_ad_ops)
 # per-layer register state rides with the backend API (defined in core to
 # keep the dependency direction core <- pim)
 from repro.core.quant_state import (QuantState, use_quant_state,
@@ -30,7 +31,8 @@ __all__ = [
     # backend API
     "PimOut", "PimBackend", "register_backend", "get_backend",
     "list_backends", "use_backend", "active_backend", "pim_mvm",
-    "ad_ops_tally", "AdOpsTally",
+    "ad_ops_tally", "AdOpsTally", "traced_ad_ops", "TracedAdOps",
+    "reemit_ad_ops",
     # per-layer registers
     "QuantState", "use_quant_state", "active_quant_state",
     "quant_state_from_calibration", "save_quant_state", "load_quant_state",

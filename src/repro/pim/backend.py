@@ -30,7 +30,7 @@ touching model code.
 from __future__ import annotations
 
 import contextlib
-from typing import Callable, NamedTuple, Optional, Protocol, runtime_checkable
+from typing import NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -148,9 +148,66 @@ def ad_ops_tally():
         _TALLY.remove(t)
 
 
+class TracedAdOps:
+    """In-trace A/D-ops accumulator: ``value`` is a jnp scalar built from the
+    tracers of exactly one trace level, so it can be RETURNED from the traced
+    function (unlike :class:`AdOpsTally`, which must drop tracers).
+
+    Scan/vmap discipline: a value accumulated inside a ``lax.scan``/``vmap``
+    body belongs to that body's trace and must not leak outward.  Model code
+    therefore pushes a *fresh* ``traced_ad_ops()`` around each scan/vmap body,
+    drains it into the carry / a stacked output, and re-emits the reduced
+    total into the enclosing tally with :func:`reemit_ad_ops` at the outer
+    trace level (see ``apply_lm`` / ``apply_encdec``)."""
+
+    def __init__(self):
+        self.value = jnp.float32(0.0)
+
+    def add(self, ops) -> None:
+        self.value = self.value + jnp.asarray(ops, jnp.float32)
+
+
+_TRACED: list[TracedAdOps] = []
+
+
+@contextlib.contextmanager
+def traced_ad_ops():
+    """A/D-ops accounting that works INSIDE ``jit``: enter within the traced
+    function and return ``t.value`` as one of its outputs.
+
+        @jax.jit
+        def step(params, batch):
+            with traced_ad_ops() as t:
+                logits, cache, _ = apply_fn(params, batch, ...)
+            return logits, cache, t.value            # scalar f32 ad_ops
+
+    This is how the serve engine meters conversions per prefill/decode call
+    without unrolling the layer scan."""
+    t = TracedAdOps()
+    _TRACED.append(t)
+    try:
+        yield t
+    finally:
+        _TRACED.remove(t)
+
+
+def reemit_ad_ops(ops) -> None:
+    """Forward an already-reduced ops total (e.g. a scan carry drained at a
+    trace boundary) into the innermost ``traced_ad_ops`` tally only.  Never
+    touches the eager per-layer tally — the per-layer values were already
+    recorded there by ``record_ad_ops`` when running un-jitted."""
+    if _TRACED:
+        _TRACED[-1].add(ops)
+
+
 def record_ad_ops(name: Optional[str], ops) -> None:
-    # tracers (scan/vmap/jit bodies) must not leak into the tally — they
-    # poison every later sum with an UnexpectedTracerError
+    # every pim_linear emission point lands here.  The traced tally (if one
+    # is active) absorbs tracers — by construction it lives in the same
+    # trace as the emission.  The eager tally must still drop tracers
+    # (scan/vmap/jit bodies) — they poison every later sum with an
+    # UnexpectedTracerError.
+    if _TRACED:
+        _TRACED[-1].add(ops)
     if _TALLY and not isinstance(ops, jax.core.Tracer):
         _TALLY[-1].add(name or "<unnamed>", ops)
 

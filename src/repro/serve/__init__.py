@@ -1,2 +1,7 @@
-from .engine import ServeEngine, Request
-from .kvcache import cache_pspecs
+from .engine import ServeEngine, Request, scatter_cache
+from .kvcache import (PagedKVCache, LeafSpec, ZERO_PAGE, cache_pspecs,
+                      kv_pspec, pool_pspecs)
+
+__all__ = ["ServeEngine", "Request", "scatter_cache", "PagedKVCache",
+           "LeafSpec", "ZERO_PAGE", "cache_pspecs", "kv_pspec",
+           "pool_pspecs"]

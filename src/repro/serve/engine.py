@@ -1,18 +1,31 @@
-"""Batched serving engine: continuous batching over a slot-based KV cache.
+"""Batched serving engine: continuous batching over a paged KV cache.
 
 Production shape (vLLM-style, sized down to what a dry-runnable JAX core
 needs):
 
-* fixed ``max_batch`` decode slots; each slot owns one row of every cache
-  leaf (KV tensors, SSM/RWKV states, enc-dec cross-KV);
+* a block pool (``serve.kvcache.PagedKVCache``): ``block_size``-token pages
+  with a free list, per-request block tables, refcounts, and hash-consed
+  prompt-prefix pages shared copy-on-write across requests — a common
+  system prompt is prefilled (and A/D-converted) once;
 * admission: queued requests are prefilled one-at-a-time with a batch=1
-  forward, then scattered into a free slot (``dynamic_update_slice`` on the
-  batch axis of every cache leaf) — decode of resident requests never
-  re-compiles or stalls on prompt length (prefill is bucketed to powers of
-  two so the number of prefill compilations is O(log max_prompt));
-* one ``decode_step`` advances *all* active slots a token (greedy or
-  temperature sampling); finished slots are freed and refilled;
-* the decode step is jit'd once per (arch, max_batch) and reused.
+  forward (bucketed to powers of two so the number of prefill compilations
+  is O(log max_prompt)); the resulting KV blocks are scattered into pool
+  pages and the O(1) recurrent state (mamba/rwkv/len counters) into the
+  request's slot row.  When a prompt's leading blocks hit the prefix index,
+  only the un-cached suffix is prefilled (``mode="prefill_cont"``);
+* one ``decode_step`` advances *all* active slots a token: the dense cache
+  view is gathered from the pool through the block tables (page 0 is
+  permanently zero, so unallocated tails materialize as exact zeros), the
+  jit'd step runs unchanged model code on it, and the one written block per
+  slot is scattered back.  Gather/scatter is pure data movement, which is
+  why paged decode is bitwise-identical to the dense slot engine
+  (``paged=False``), kept as the reference for the equivalence suite;
+* per-request A/D-energy metering: every prefill/decode jit call returns
+  the summed ``PimOut.ad_ops`` of its ``pim_mvm`` calls (threaded through
+  the layer scans by ``repro.pim.backend.traced_ad_ops``); the engine
+  attributes them to requests (prefill ops exactly, decode ops split over
+  the slots that stepped) so ``stats()`` reports per-request conversion
+  counts and SAR energy (Eq. 6) next to tokens/s and TTFT.
 
 The engine is mesh-agnostic: under ``use_mesh`` the same code paths run
 pjit'd with the KV-cache shardings from ``serve.kvcache``.
@@ -27,7 +40,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.energy import adc_energy_pj
 from repro.core.quant_state import QuantState, use_quant_state
+from repro.dist.sharding import _ACTIVE as _MESH_ACTIVE
+from repro.pim.backend import traced_ad_ops
+from .kvcache import PagedKVCache, ZERO_PAGE, pool_pspecs
 
 
 @dataclasses.dataclass
@@ -42,10 +59,27 @@ class Request:
     submit_t: float = 0.0
     first_token_t: float = 0.0
     finish_t: float = 0.0
+    # energy metering (SAR comparator cycles attributed to this request)
+    ad_ops: float = 0.0
+    prefill_ad_ops: float = 0.0
+    reused_tokens: int = 0              # prompt tokens served from the
+    #                                     prefix cache (not re-converted)
+    # paged-cache bookkeeping
+    cache_len: int = 0                  # resident tokens (incl. padding)
+    block_table: list = dataclasses.field(default_factory=list)
 
     @property
     def tokens(self) -> list:
         return list(self.prompt) + self.generated
+
+    @property
+    def ad_energy_pj(self) -> float:
+        """SAR conversion energy this request cost (Eq. 6)."""
+        return float(adc_energy_pj(self.ad_ops))
+
+    @property
+    def decode_ad_ops(self) -> float:
+        return self.ad_ops - self.prefill_ad_ops
 
 
 def _batch_axis(big_shape: tuple, small_shape: tuple) -> int:
@@ -55,10 +89,13 @@ def _batch_axis(big_shape: tuple, small_shape: tuple) -> int:
             return i
     raise ValueError(f"no batch axis between {big_shape} and {small_shape}")
 
-
 def scatter_cache(big, small, slot: int):
-    """Insert a batch=1 cache pytree into slot ``slot`` of the big cache."""
+    """Insert a batch=1 cache pytree into slot ``slot`` of the big cache.
+    Scalar (dummy) leaves pass through — the paged engine's state trees
+    carry placeholder 0s where the pooled seq leaves were stripped."""
     def one(b, s):
+        if b.ndim == 0:
+            return b
         ax = _batch_axis(b.shape, s.shape)
         idx = [0] * b.ndim
         idx[ax] = slot
@@ -66,13 +103,34 @@ def scatter_cache(big, small, slot: int):
     return jax.tree.map(one, big, small)
 
 
+def _attn_only(cfg) -> bool:
+    """Prefix reuse needs every mixer to be attention: K/V blocks are a
+    pure function of the prefix, while recurrent (mamba/rwkv) prefixes
+    would need chunk-aligned state snapshots whose scan boundaries change
+    the float associativity (not bitwise vs the monolithic prefill)."""
+    try:
+        kinds = {cfg.layer_kind(i)[0] for i in range(cfg.period)}
+    except (AttributeError, TypeError):
+        return False
+    return (kinds == {"attn"} and cfg.encoder_layers == 0
+            and cfg.frontend == "none")
+
+
 class ServeEngine:
-    """Continuous-batching serving loop around (prefill, decode) steps."""
+    """Continuous-batching serving loop around (prefill, decode) steps.
+
+    ``paged=True`` (default) runs the block-pool cache with prefix reuse;
+    ``paged=False`` keeps the dense slot cache — the reference
+    implementation the paged path is tested bitwise against.
+    """
 
     def __init__(self, cfg, apply_fn, cache_fn, params, *,
                  max_batch: int = 8, max_len: int = 512,
                  extra_inputs: Optional[Callable[[int, int], dict]] = None,
                  quant_state: Optional[QuantState] = None,
+                 paged: bool = True, block_size: int = 16,
+                 prefix_reuse: bool = True,
+                 num_blocks: Optional[int] = None,
                  rng_seed: int = 0):
         self.cfg = cfg
         self.apply_fn = apply_fn
@@ -86,16 +144,37 @@ class ServeEngine:
         # extra_inputs(batch, seq) -> dict of extra batch entries (modality
         # stubs: 'embeds' for vlm/audio frontends)
         self.extra_inputs = extra_inputs or (lambda b, s: {})
-        self.cache = cache_fn(max_batch, max_len)
+        self.paged = paged
+        self.prefix_reuse = prefix_reuse and paged and _attn_only(cfg)
+        if paged:
+            block_size = min(block_size, max_len)
+            self.kv = PagedKVCache(cache_fn, max_batch, max_len,
+                                   block_size=block_size,
+                                   num_blocks=num_blocks)
+            self.block_size = self.kv.block_size
+            self.state_cache = self.kv.make_state(max_batch)
+            mesh = _MESH_ACTIVE.get("mesh")
+            if mesh is not None and self.kv.pools:
+                self.kv.pools = jax.device_put(
+                    self.kv.pools, pool_pspecs(mesh, cfg, self.kv.pools))
+            self.cache = None
+        else:
+            self.kv = None
+            self.block_size = 0
+            self.cache = cache_fn(max_batch, max_len)
         self.slots: list[Optional[Request]] = [None] * max_batch
+        self._zero_small = None
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        self.total_ad_ops = 0.0
+        self.prefill_ad_ops = 0.0
         self._uid = 0
         self._key = jax.random.PRNGKey(rng_seed)
         self._prefill_cache_fn = cache_fn
         self._decode_jit = jax.jit(self._decode_step)
         self._prefill_jit = jax.jit(self._prefill_step,
                                     static_argnames=("plen",))
+        self._prefill_cont_jit = jax.jit(self._prefill_cont_step)
         self._scatter_jit = jax.jit(scatter_cache, static_argnames=())
 
     # -- request lifecycle ---------------------------------------------------
@@ -112,21 +191,33 @@ class ServeEngine:
     # -- jit'd step functions --------------------------------------------------
 
     def _prefill_step(self, params, tokens, extra, plen: int):
-        """tokens: (1, plen_padded); returns (last_logits, batch=1 cache)."""
-        with use_quant_state(self.quant_state):
+        """tokens: (1, plen_padded); returns (last_logits, batch=1 cache,
+        summed A/D ops of every pim_mvm in the trace)."""
+        with use_quant_state(self.quant_state), traced_ad_ops() as tally:
             cache = self._prefill_cache_fn(1, self.max_len)
             batch = {"tokens": tokens, **extra}
             logits, cache, _ = self.apply_fn(params, batch, cache=cache,
                                              mode="prefill")
-            return logits[:, -1], cache
+            return logits[:, -1], cache, tally.value
+
+    def _prefill_cont_step(self, params, tokens, positions, cache):
+        """Continued prefill: append the suffix tokens to a warm cache that
+        already holds ``positions[0]`` prefix tokens (prefix-reuse path).
+        The cache buffer is trimmed to prefix+suffix so the attention
+        reductions have exactly the monolithic-prefill extent."""
+        with use_quant_state(self.quant_state), traced_ad_ops() as tally:
+            batch = {"tokens": tokens, "positions": positions}
+            logits, cache, _ = self.apply_fn(params, batch, cache=cache,
+                                             mode="prefill_cont")
+            return logits[:, -1], cache, tally.value
 
     def _decode_step(self, params, cache, tokens, extra):
         """tokens: (max_batch, 1); one token for every slot."""
-        with use_quant_state(self.quant_state):
+        with use_quant_state(self.quant_state), traced_ad_ops() as tally:
             batch = {"tokens": tokens, **extra}
             logits, cache, _ = self.apply_fn(params, batch, cache=cache,
                                              mode="decode")
-            return logits[:, -1], cache
+            return logits[:, -1], cache, tally.value
 
     def _sample(self, logits: jax.Array, temps: np.ndarray) -> np.ndarray:
         self._key, k = jax.random.split(self._key)
@@ -145,23 +236,178 @@ class ServeEngine:
             b *= 2
         return min(b, self.max_len)
 
+    def _meter(self, r: Request, ops, prefill: bool = False) -> None:
+        ops = float(ops)
+        r.ad_ops += ops
+        if prefill:
+            r.prefill_ad_ops += ops
+            self.prefill_ad_ops += ops
+        self.total_ad_ops += ops
+
+    def _finalize(self, r: Request) -> None:
+        r.done = True
+        r.finish_t = time.perf_counter()
+        if r.first_token_t == 0.0:
+            # prefill-only request: the "first token" event is prefill
+            # completion (consistent TTFT even when max_new_tokens == 0)
+            r.first_token_t = r.finish_t
+        self.finished.append(r)
+        if self.paged and r.block_table:
+            self.kv.release(r.block_table)
+            r.block_table = []
+
+    def _zero_slot(self, slot: int) -> None:
+        """Zero an idle slot's cache rows.  Idle rows still ride through
+        every batched decode step (which garbage-writes their K/V at
+        position 0 and evolves their recurrent state), and their content
+        leaks into ACTIVE rows through batch-coupled ops — the dynamic
+        max-abs quantization scales of the fake_quant/pallas datapaths and
+        MoE capacity dispatch.  Keeping idle rows deterministically zero
+        makes serving results independent of slot-reuse history, and the
+        paged engine (whose freed pages revert to the zero page) bitwise-
+        comparable to the dense one."""
+        if self._zero_small is None:
+            if self.paged:
+                self._zero_small = self.kv.make_state(1)
+            else:
+                self._zero_small = jax.tree.map(
+                    jnp.zeros_like, self._prefill_cache_fn(1, self.max_len))
+        if self.paged:
+            self.state_cache = self._scatter_jit(self.state_cache,
+                                                 self._zero_small, slot)
+        else:
+            self.cache = self._scatter_jit(self.cache, self._zero_small,
+                                           slot)
+
+    def _prefill(self, r: Request):
+        """Prefill ``r`` (reusing cached prefix blocks when possible),
+        install its cache (pool pages + state slot row comes later via
+        ``_install``), sample the first token, meter ops/TTFT.
+        Returns the batch=1 small cache (or None in paged mode where blocks
+        are already written)."""
+        plen = int(min(len(r.prompt), self.max_len - r.max_new_tokens))
+        padded = self._bucket(plen)
+        toks = np.zeros((1, padded), np.int32)
+        toks[0, -plen:] = r.prompt[-plen:]   # left-pad into the bucket
+        extra = self.extra_inputs(1, padded)
+        n_extra = int(extra["embeds"].shape[1]) if "embeds" in extra else 0
+        # frontend embeds prepend to the DECODER sequence for vlm/audio LMs;
+        # for enc-dec they feed the encoder (cross-KV rows) instead
+        encdec = self.cfg.encoder_layers > 0
+        n_front = 0 if encdec else n_extra
+        total_len = padded + n_front          # cache rows the prefill writes
+        seq_valid = max(total_len, n_extra if encdec else 0)
+        bs = self.block_size
+
+        reuse_n, keys = 0, []
+        if self.prefix_reuse and n_front == 0 and padded >= bs:
+            # only FULL blocks are shareable; always leave >=1 suffix token
+            # so the first-token logits are recomputed, never snapshotted
+            cap = min((padded - 1) // bs, self.kv.pages_per_slot)
+            keys = self.kv.prefix_keys(padded, toks[0], bs, cap)
+            reuse_n, shared = self.kv.lookup_prefix(keys)
+
+        if reuse_n:
+            self.kv.incref(shared)
+            r.block_table = list(shared)
+            L = reuse_n * bs
+            state1 = self.kv.make_state(1, fill_len=L)
+            table1 = np.full((1, padded // bs), ZERO_PAGE, np.int32)
+            table1[0, :reuse_n] = shared
+            dense1 = self.kv.assemble(state1, table1)
+            positions = np.arange(L, padded, dtype=np.int32)[None]
+            last_logits, small, ops = self._prefill_cont_jit(
+                self.params, jnp.asarray(toks[:, L:]),
+                jnp.asarray(positions), dense1)
+            r.reused_tokens = L
+        else:
+            last_logits, small, ops = self._prefill_jit(
+                self.params, jnp.asarray(toks), extra, plen=padded)
+        self._meter(r, ops, prefill=True)
+
+        if self.paged and self.kv.specs:
+            n_blk = min(-(-seq_valid // bs), self.kv.pages_per_slot)
+            new_blks = np.arange(reuse_n, n_blk, dtype=np.int32)
+            if len(new_blks):
+                new_pages = self.kv.alloc_pages(len(new_blks))
+                r.block_table.extend(new_pages)
+                self.kv.write_blocks(small, np.zeros(len(new_blks)),
+                                     new_blks, new_pages)
+            if keys:
+                self.kv.register_prefix(keys, r.block_table)
+        r.cache_len = total_len
+
+        nxt = self._sample(last_logits, np.array([r.temperature]))
+        r.first_token_t = time.perf_counter()
+        if r.max_new_tokens > 0:
+            r.generated.append(int(nxt[0]))
+        return small
+
+    def _install(self, r: Request, small, slot: int) -> None:
+        """Scatter the batch=1 prefill cache into decode residency."""
+        if self.paged:
+            self.state_cache = self._scatter_jit(
+                self.state_cache, self.kv.state_only(small), slot)
+        else:
+            self.cache = self._scatter_jit(self.cache, small, slot)
+
     def _admit(self):
         for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self.queue:
+            if self.slots[slot] is not None:
                 continue
-            r = self.queue.pop(0)
-            plen = int(min(len(r.prompt), self.max_len - r.max_new_tokens))
-            padded = self._bucket(plen)
-            toks = np.zeros((1, padded), np.int32)
-            toks[0, -plen:] = r.prompt[-plen:]   # left-pad into the bucket
-            extra = self.extra_inputs(1, padded)
-            last_logits, small = self._prefill_jit(
-                self.params, jnp.asarray(toks), extra, plen=padded)
-            nxt = self._sample(last_logits, np.array([r.temperature]))
-            r.generated.append(int(nxt[0]))
-            r.first_token_t = time.perf_counter()
-            self.cache = self._scatter_jit(self.cache, small, slot)
-            self.slots[slot] = r
+            while self.queue:
+                r = self.queue.pop(0)
+                small = self._prefill(r)
+                if len(r.generated) >= r.max_new_tokens:
+                    # prefill-only (max_new_tokens <= 1): finished at
+                    # admission — never occupies a decode slot.  Reused /
+                    # registered prefix pages stay cached for later
+                    # requests (prefix warming).
+                    self._finalize(r)
+                    continue
+                self._install(r, small, slot)
+                self.slots[slot] = r
+                break
+
+    def _decode_cache(self):
+        """The dense cache view for this decode step (+ per-slot tables)."""
+        if not self.paged:
+            return self.cache
+        tables = np.full((self.max_batch, self.kv.pages_per_slot),
+                         ZERO_PAGE, np.int32)
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            if self.kv.specs:
+                blk = self._write_blk(r)
+                while len(r.block_table) <= blk:
+                    r.block_table.extend(self.kv.alloc_pages(1))
+                self.kv.ensure_private(r.block_table, blk)
+                tables[i, :len(r.block_table)] = r.block_table
+        return self.kv.assemble(self.state_cache, tables)
+
+    def _write_blk(self, r: Request) -> int:
+        """Block index this decode step writes: the model's cache scatter
+        clamps at the buffer end, so a run-over request keeps rewriting the
+        last row of the last block (same semantics as the dense engine)."""
+        return min(r.cache_len, self.max_len - 1) // self.block_size
+
+    def _writeback(self, new_cache, active: list) -> None:
+        """Persist what the decode step wrote: the one touched block per
+        active slot back into its pool page; recurrent state wholesale."""
+        if not self.paged:
+            self.cache = new_cache
+            return
+        self.state_cache = self.kv.state_only(new_cache)
+        if not self.kv.specs:
+            return
+        slots = np.asarray(active, np.int32)
+        blks = np.asarray([self._write_blk(self.slots[i])
+                           for i in active], np.int32)
+        pages = np.asarray([self.slots[i].block_table[b]
+                            for i, b in zip(active, blks)], np.int32)
+        self.kv.write_blocks(new_cache, slots, blks, pages,
+                             skip_static=True)
 
     def step(self) -> int:
         """Admit + one decode step for all active slots.  Returns #active."""
@@ -175,17 +421,27 @@ class ServeEngine:
             toks[i, 0] = self.slots[i].generated[-1]
             temps[i] = self.slots[i].temperature
         extra = self.extra_inputs(self.max_batch, 1)
-        logits, self.cache = self._decode_jit(
-            self.params, self.cache, jnp.asarray(toks), extra)
+        cache = self._decode_cache()
+        logits, new_cache, ops = self._decode_jit(
+            self.params, cache, jnp.asarray(toks), extra)
+        self._writeback(new_cache, active)
+        # batched MVMs convert all resident rows together; attribute the
+        # step's conversions evenly across the slots that stepped (total is
+        # conserved: sum over requests == sum of per-call PimOut.ad_ops)
+        share = float(ops) / len(active)
+        self.total_ad_ops += float(ops)
         nxt = self._sample(logits, temps)
         for i in active:
             r = self.slots[i]
+            r.ad_ops += share
             r.generated.append(int(nxt[i]))
+            r.cache_len += 1
             if len(r.generated) >= r.max_new_tokens:
-                r.done = True
-                r.finish_t = time.perf_counter()
-                self.finished.append(r)
+                self._finalize(r)
                 self.slots[i] = None
+        for i in range(self.max_batch):
+            if self.slots[i] is None:
+                self._zero_slot(i)
         return len(active)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
@@ -206,8 +462,27 @@ class ServeEngine:
         toks = sum(len(r.generated) for r in self.finished)
         span = max(r.finish_t for r in self.finished) - \
             min(r.submit_t for r in self.finished)
-        return {"requests": len(self.finished),
-                "mean_ttft_s": float(np.mean(ttft)),
-                "mean_latency_s": float(np.mean(lat)),
-                "decode_tokens": toks,
-                "tokens_per_s": toks / max(span, 1e-9)}
+        out = {"requests": len(self.finished),
+               "mean_ttft_s": float(np.mean(ttft)),
+               "mean_latency_s": float(np.mean(lat)),
+               "decode_tokens": toks,
+               "tokens_per_s": toks / max(span, 1e-9),
+               # A/D-conversion metering (SAR cycles, Eq. 6)
+               "total_ad_ops": self.total_ad_ops,
+               "prefill_ad_ops": self.prefill_ad_ops,
+               "decode_ad_ops": self.total_ad_ops - self.prefill_ad_ops,
+               "mean_ad_ops_per_request": float(np.mean(
+                   [r.ad_ops for r in self.finished])),
+               "total_ad_energy_pj": float(adc_energy_pj(self.total_ad_ops)),
+               "mean_ad_energy_pj_per_request": float(adc_energy_pj(np.mean(
+                   [r.ad_ops for r in self.finished]))),
+               "reused_prompt_tokens": sum(r.reused_tokens
+                                           for r in self.finished)}
+        if self.paged:
+            out["paged"] = {
+                "block_size": self.block_size,
+                "num_blocks": self.kv.num_blocks,
+                "pages_in_use": int((self.kv.refcount > 0).sum()) - 1,
+                "prefix_nodes": len(self.kv.prefix_index),
+                **self.kv.stats}
+        return out

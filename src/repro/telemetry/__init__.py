@@ -1,5 +1,7 @@
 from .hlo import collective_bytes, parse_shape_bytes
 from .roofline import RooflineReport, roofline, V5E
+from .serve_report import format_energy_report, request_rows, serve_report
 
 __all__ = ["collective_bytes", "parse_shape_bytes", "RooflineReport",
-           "roofline", "V5E"]
+           "roofline", "V5E", "format_energy_report", "request_rows",
+           "serve_report"]

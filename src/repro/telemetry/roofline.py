@@ -169,7 +169,6 @@ def _mixer_flops_per_token(cfg, s: int, causal: bool = True) -> float:
     mamba:     ~9 ops over (di, ds) selective-scan state updates.
     rwkv6:     ~6 ops over (H, hs, hs) state outer-products = 6·d·hs.
     """
-    per_layer = {}
     hd = cfg.hd
     attn = 4.0 * s * cfg.n_heads * hd * (0.5 if causal else 1.0)
     di = cfg.d_model * cfg.ssm_expand

@@ -6,14 +6,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.dist.sharding import use_mesh, shard, param_pspecs, zero1_upgrade
+from repro.dist.sharding import param_pspecs, zero1_upgrade
 from .optimizer import lr_schedule, make_optimizer
 
 AUX_LOSS_WEIGHT = 0.01

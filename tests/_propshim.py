@@ -9,7 +9,7 @@ assertions run either way — with fewer examples and no shrinking, which is
 the accepted trade-off for a hermetic test environment.
 """
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ImportError:
     HAVE_HYPOTHESIS = False

@@ -3,12 +3,11 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.core.distribution import classify, r_ideal_bits
-from repro.core.energy import (POWER_SHARES, R_ADC_DEFAULT, adc_energy_pj,
+from repro.core.distribution import r_ideal_bits
+from repro.core.energy import (POWER_SHARES, adc_energy_pj,
                                conversions_per_mvm, ideal_resolution,
-                               layer_report, mean_ops_trq, mean_ops_uniform,
-                               model_adc_ratio, system_power_breakdown,
-                               trq_op_ratio)
+                               layer_report, model_adc_ratio,
+                               system_power_breakdown, trq_op_ratio)
 from repro.core.trq import make_params
 from repro.pim.crossbar import collect_bl_samples
 

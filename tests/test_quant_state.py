@@ -10,7 +10,6 @@ import jax.numpy as jnp
 from repro.core.calibrate import calibrate_layer, to_quant_state
 from repro.core.quant_state import (QuantState, active_quant_state,
                                     load_quant_state,
-                                    quant_state_from_calibration,
                                     save_quant_state, use_quant_state)
 from repro.core.trq import make_params
 from repro.models.registry import build_model, get_config
@@ -197,7 +196,7 @@ def test_serve_engine_applies_quant_state(rng):
     def prefill_logits(qs):
         eng = ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=2,
                           max_len=32, quant_state=qs)
-        logits, _ = eng._prefill_jit(params, toks, {}, plen=8)
+        logits, _, _ops = eng._prefill_jit(params, toks, {}, plen=8)
         return np.asarray(logits)
 
     base = prefill_logits(None)

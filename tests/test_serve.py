@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.registry import build_model, get_config
-from repro.serve.engine import Request, ServeEngine, scatter_cache
+from repro.serve.engine import ServeEngine, scatter_cache
 
 KEY = jax.random.PRNGKey(0)
 

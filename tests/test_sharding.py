@@ -1,11 +1,9 @@
 """Sharding-rule and distribution-plumbing tests."""
 import re
 
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.dist.sharding import (_PARAM_RULES, logical, param_pspecs, shard,
                                  use_mesh, zero1_upgrade)

@@ -6,8 +6,7 @@ import jax.numpy as jnp
 from _propshim import given, settings, st
 
 from repro.core.trq import (ideal_params, make_params, quant_mse, trq_ad_ops,
-                            trq_quant, trq_quant_ste, uniform_code,
-                            uniform_quant)
+                            trq_quant, trq_quant_ste, uniform_quant)
 
 F32 = np.float32
 
