@@ -11,6 +11,10 @@ Rules
   ``us``/``wall`` and ``*ad_ops*`` are lower-is-better.
 * Deterministic conversion counts (``*ad_ops*``) gate at ``--threshold``
   (default 25% — the paper-relevant trajectory must not silently inflate).
+* ``mean_ad_ops`` kernel records gate EXACTLY (any change fails): they are
+  deterministic per-conversion averages on pinned inputs, and the prepared
+  (plan-cache) and decode-shaped fast paths are bitwise-identical claims —
+  a drifted count means the datapaths silently diverged, not jitter.
 * Wall-clock metrics gate at ``--timing-threshold`` (default 2.0 = 200%):
   CPU interpret-mode timings on shared CI runners jitter far beyond 25%,
   so the tight gate is reserved for counts while timings only catch
@@ -48,6 +52,8 @@ def classify(path: str):
         return +1, "timing"    # wall-clock-derived: loose gate, more = better
     if "saved_frac" in leaf or "reused" in leaf:
         return +1, "count"     # deterministic reuse counters
+    if leaf == "mean_ad_ops":
+        return -1, "exact"     # pinned-input per-conversion average
     if "ad_ops" in leaf or "ad_energy" in leaf:
         return -1, "count"
     if _is_timing(leaf):
@@ -66,16 +72,30 @@ def compare(fresh: dict, base: dict, threshold: float,
         direction, kind = classify(path)
         if direction == 0 or kind == "info":
             continue
-        thr = timing_threshold if kind == "timing" else threshold
         f_val = f_flat[path]
+        if kind == "exact":
+            if f_val != b_val:
+                failures.append(
+                    f"{path}: {b_val:.6g} -> {f_val:.6g} "
+                    f"(exact gate: deterministic count drifted)")
+            continue
+        thr = timing_threshold if kind == "timing" else threshold
         if b_val == 0:
             continue
         rel = (f_val - b_val) / abs(b_val)
-        regressed = rel > thr if direction < 0 else rel < -thr
+        # multiplicative gate both ways: lower-is-better fails above
+        # b*(1+thr); higher-is-better fails below b/(1+thr).  (A plain
+        # rel < -thr test is unsatisfiable for thr >= 1 — throughput can
+        # only fall 100% — which silently disabled the tokens_per_s gate.)
+        if direction < 0:
+            regressed = rel > thr
+            bound = f"{kind} gate +{thr:.0%}"
+        else:
+            regressed = f_val * (1 + thr) < b_val
+            bound = f"{kind} gate -{thr / (1 + thr):.0%}"
         if regressed:
             failures.append(
-                f"{path}: {b_val:.6g} -> {f_val:.6g} "
-                f"({rel:+.1%}, {kind} gate ±{thr:.0%})")
+                f"{path}: {b_val:.6g} -> {f_val:.6g} ({rel:+.1%}, {bound})")
     return failures
 
 

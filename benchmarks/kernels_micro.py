@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.core.trq import make_params, trq_quant
 from repro.kernels import (trq_group_mvm_pallas, trq_quant_pallas,
                            xbar_mvm_pallas)
-from repro.pim import list_backends, pim_mvm
+from repro.pim import list_backends, pim_mvm, prepare_linear
 from repro.pim.crossbar import bit_exact_mvm, fake_quant_mvm
 
 from .common import emit, timeit
@@ -49,6 +49,26 @@ def run(quick: bool = False) -> dict:
     rec("kernel.trq_group_mvm.pallas_interp", us, "m128.k512.n128")
     rec("kernel.trq_group_mvm.jnp_oracle", us_ref, "m128.k512.n128")
 
+    # -- decode-shaped sweeps: M = active batch (single-token serving) -----
+    # auto block_m picks the {8,16,32,64}-row tile covering M instead of
+    # padding to 128; the pad128 record is the pre-plan-cache equivalent,
+    # kept as the speedup denominator (identical numerics, only padding)
+    wd = jnp.asarray(rng.normal(0, 1, (512, 128)).astype(np.float32))
+    for m in (1, 8, 16):
+        ad = jnp.asarray(rng.normal(0, 1, (m, 512)).astype(np.float32))
+        us = timeit(lambda a_, w_: trq_group_mvm_pallas(a_, w_, p, 0.05, 1.0,
+                                                        interpret=True),
+                    ad, wd, iters=3 if quick else 5)
+        rec(f"kernel.trq_group_mvm.decode_m{m}", us, f"m{m}.k512.n128.auto")
+        if m == 8:
+            us = timeit(
+                lambda a_, w_: trq_group_mvm_pallas(a_, w_, p, 0.05, 1.0,
+                                                    block_m=128,
+                                                    interpret=True),
+                ad, wd, iters=3 if quick else 5)
+            rec("kernel.trq_group_mvm.decode_m8_pad128", us,
+                "m8.k512.n128.block_m128")
+
     ai = jnp.asarray(rng.integers(0, 256, (16, 128)).astype(np.int32))
     wi = jnp.asarray(rng.integers(-128, 128, (128, 16)).astype(np.int32))
     us = timeit(lambda aa, ww: xbar_mvm_pallas(aa, ww, p, interpret=True)[0],
@@ -83,6 +103,16 @@ def run(quick: bool = False) -> dict:
                 if small else shape_note)
         rec(f"backend.{name}.mvm", us,
             f"{note}.mean_ad_ops={mean_ops:.2f}", mean_ad_ops=mean_ops)
+        # prepared fast path: weight-side state frozen by the plan cache.
+        # Bitwise-identical to the dynamic record above (mean_ad_ops must
+        # match exactly — gated by check_regression)
+        lp = prepare_linear(ww, trq, backend=name)
+        us = timeit(lambda a_, l_=lp: pim_mvm(a_, plan=l_).y,
+                    aa, iters=2 if quick else 3)
+        pout = pim_mvm(aa, plan=lp)
+        rec(f"backend.{name}.mvm_prepared", us,
+            f"{note}.plan.mean_ad_ops={float(pout.ad_ops) / conv:.2f}",
+            mean_ad_ops=float(pout.ad_ops) / conv)
     return records
 
 

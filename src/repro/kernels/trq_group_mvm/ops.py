@@ -1,4 +1,13 @@
-"""jit'd public wrapper for trq_group_mvm (pads M/N/K, restores shape)."""
+"""jit'd public wrapper for trq_group_mvm (pads M/N/K, restores shape).
+
+Decode-shaped fast path: serving decode calls this with M = active batch
+(often 1-16 rows).  Padding those up to the training-shaped 128-row tile
+wastes >=87% of the M-dimension compute, so ``block_m=None`` (the default)
+picks the smallest tile in {8, 16, 32, 64, 128} covering the runtime M —
+row results are independent in the matmul, so the choice never changes the
+numerics, only the padding waste.  Pads are also skipped entirely when the
+operands are already tile-aligned (prefill/train shapes), saving the copy.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -11,39 +20,70 @@ from repro.core.trq import TRQParams
 from ..runtime import resolve_interpret
 from .kernel import XBAR, trq_group_mvm_tiles
 
+# decode-shaped M tiles: multiples of the f32 sublane (8) up to the MXU tile
+BLOCK_M_CHOICES = (8, 16, 32, 64, 128)
+
+
+def pick_block_m(m: int) -> int:
+    """Smallest supported row tile covering ``m`` rows (128 caps it: larger
+    M just runs more grid steps on 128-row tiles)."""
+    for b in BLOCK_M_CHOICES:
+        if m <= b:
+            return b
+    return BLOCK_M_CHOICES[-1]
+
+
+def _pad2(x: jax.Array, pad_r: int, pad_c: int) -> jax.Array:
+    """Zero-pad the two trailing dims, skipping the copy when aligned."""
+    if pad_r or pad_c:
+        return jnp.pad(x, ((0, pad_r), (0, pad_c)))
+    return x
+
 
 @partial(jax.jit, static_argnames=("block_m", "block_n", "interpret",
                                    "with_ops"))
-def trq_group_mvm_pallas(a: jax.Array, w: jax.Array, p: TRQParams,
-                         a_scale=1.0, w_scale=1.0, *, block_m: int = 128,
-                         block_n: int = 128,
-                         interpret: Optional[bool] = None,
-                         with_ops: bool = False):
-    """Per-128-row-group signed-TRQ matmul: a (..., K) @ w (K, N).
-
-    ``interpret=None`` auto-detects: compiled on TPU, interpreted elsewhere.
-    ``with_ops=True`` additionally returns the total A/D operations (SAR
-    comparator cycles, f32 scalar) spent on the valid output region —
-    the same count ``trq_ad_ops`` produces in the behavioral simulator."""
-    interpret = resolve_interpret(interpret)
-    lead = a.shape[:-1]
-    k_ = a.shape[-1]
+def _trq_group_mvm_padded(a2, w, p, grid_scale, *, block_m, block_n,
+                          interpret, with_ops):
+    m_, k_ = a2.shape
     n_ = w.shape[1]
-    a2 = a.reshape(-1, k_).astype(jnp.float32)
-    m_ = a2.shape[0]
-
-    pad_m = (-m_) % block_m
-    pad_n = (-n_) % block_n
-    pad_k = (-k_) % XBAR
-    a_p = jnp.pad(a2, ((0, pad_m), (0, pad_k)))
-    w_p = jnp.pad(w.astype(jnp.float32), ((0, pad_k), (0, pad_n)))
-
-    grid_scale = jnp.asarray(a_scale, jnp.float32) * jnp.asarray(w_scale, jnp.float32)
+    a_p = _pad2(a2.astype(jnp.float32), (-m_) % block_m, (-k_) % XBAR)
+    w_p = _pad2(w.astype(jnp.float32), (-k_) % XBAR, (-n_) % block_n)
     out = trq_group_mvm_tiles(a_p, w_p, p, grid_scale, block_m=block_m,
                               block_n=block_n, interpret=interpret,
                               with_ops=with_ops)
     if with_ops:
         y, ops = out
-        return (y[:m_, :n_].reshape(*lead, n_),
-                jnp.sum(ops[:m_, :n_]))
-    return out[:m_, :n_].reshape(*lead, n_)
+        return y[:m_, :n_], jnp.sum(ops[:m_, :n_])
+    return out[:m_, :n_]
+
+
+def trq_group_mvm_pallas(a: jax.Array, w: jax.Array, p: TRQParams,
+                         a_scale=1.0, w_scale=1.0, *,
+                         block_m: Optional[int] = None, block_n: int = 128,
+                         interpret: Optional[bool] = None,
+                         with_ops: bool = False):
+    """Per-128-row-group signed-TRQ matmul: a (..., K) @ w (K, N).
+
+    ``block_m=None`` auto-selects the row tile from the runtime M (decode
+    shapes stop padding to 128); ``interpret=None`` auto-detects: compiled
+    on TPU, interpreted elsewhere.  ``with_ops=True`` additionally returns
+    the total A/D operations (SAR comparator cycles, f32 scalar) spent on
+    the valid output region — the same count ``trq_ad_ops`` produces in the
+    behavioral simulator."""
+    interpret = resolve_interpret(interpret)
+    lead = a.shape[:-1]
+    k_ = a.shape[-1]
+    n_ = w.shape[1]
+    a2 = a.reshape(-1, k_)
+    if block_m is None:
+        block_m = pick_block_m(a2.shape[0])
+
+    grid_scale = (jnp.asarray(a_scale, jnp.float32)
+                  * jnp.asarray(w_scale, jnp.float32))
+    out = _trq_group_mvm_padded(a2, w, p, grid_scale, block_m=block_m,
+                                block_n=block_n, interpret=interpret,
+                                with_ops=with_ops)
+    if with_ops:
+        y, ops = out
+        return y.reshape(*lead, n_), ops
+    return out.reshape(*lead, n_)

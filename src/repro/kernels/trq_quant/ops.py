@@ -29,9 +29,12 @@ def trq_quant_pallas(x: jax.Array, p: TRQParams, *, block_m: int = 256,
     cols = block_n
     rows = -(-n // cols)
     pad_flat = rows * cols - n
-    flat = jnp.pad(flat, (0, pad_flat))
+    if pad_flat:                      # skip the copy when tile-aligned
+        flat = jnp.pad(flat, (0, pad_flat))
     rows_pad = (-rows) % block_m
-    x2 = jnp.pad(flat.reshape(rows, cols), ((0, rows_pad), (0, 0)))
+    x2 = flat.reshape(rows, cols)
+    if rows_pad:
+        x2 = jnp.pad(x2, ((0, rows_pad), (0, 0)))
     q2, ops2 = trq_quant_tiles(x2, p, block_m=block_m, block_n=block_n,
                                interpret=interpret)
     q = q2.reshape(-1)[:n].reshape(orig_shape)

@@ -36,13 +36,18 @@ def xbar_mvm_pallas(a_uint: jax.Array, w_int: jax.Array,
     pad_m = (-m_) % block_m
     pad_n = (-n_) % block_n
     pad_k = (-k_) % XBAR
-    a_p = jnp.pad(a_uint.astype(jnp.int32), ((0, pad_m), (0, pad_k)))
-    u_p = jnp.pad(u.astype(jnp.int32), ((0, pad_k), (0, pad_n)))
+    a_p = a_uint.astype(jnp.int32)
+    u_p = u.astype(jnp.int32)
+    if pad_m or pad_k:                # skip the copy when tile-aligned
+        a_p = jnp.pad(a_p, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        u_p = jnp.pad(u_p, ((0, pad_k), (0, pad_n)))
 
     acc, ops = xbar_mvm_tiles(a_p, u_p, p, k_i=k_i, k_w=k_w, r_adc=r_adc,
                               block_m=block_m, block_n=block_n,
                               interpret=interpret)
-    acc = acc[:m_, :n_]
-    ops = ops[:m_, :n_]
+    if pad_m or pad_n:
+        acc = acc[:m_, :n_]
+        ops = ops[:m_, :n_]
     corr = zp * jnp.sum(a_uint.astype(jnp.float32), axis=1, keepdims=True)
     return acc - corr, ops

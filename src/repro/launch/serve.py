@@ -51,6 +51,12 @@ def main(argv=None):
     ap.add_argument("--quant-state", default=None,
                     help="Algorithm-1 per-layer registers "
                          "(quant_state.json or its checkpoint dir)")
+    ap.add_argument("--plan", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="weight-stationary plan cache: program the "
+                         "crossbars once at engine init and serve on the "
+                         "prepared fast path (--no-plan re-derives weight "
+                         "state per call, for A/B runs)")
     ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
                     default=True, help="paged KV cache (block pool)")
     ap.add_argument("--block-size", type=int, default=16,
@@ -95,9 +101,13 @@ def main(argv=None):
         engine = ServeEngine(cfg, apply_fn, cache_fn, params,
                              max_batch=args.max_batch, max_len=args.max_len,
                              extra_inputs=extra_inputs, quant_state=qs,
+                             plan=args.plan,
                              paged=args.paged, block_size=args.block_size,
                              prefix_reuse=args.prefix_reuse,
                              num_blocks=args.num_blocks)
+        if engine.plan is not None:
+            print(f"programmed {len(engine.plan)} crossbar layer plans "
+                  f"({cfg.pim_backend})")
         for _ in range(args.requests):
             tail = rng.integers(0, cfg.vocab_size, args.prompt_len)
             prompt = tail if prefix is None else np.concatenate([prefix,

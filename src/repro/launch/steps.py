@@ -26,6 +26,7 @@ from repro.configs.base import (LONG_CONTEXT_ARCHS, ModelConfig, SHAPES,
 from repro.core.quant_state import QuantState, use_quant_state
 from repro.dist.sharding import param_pspecs, use_mesh
 from repro.models.registry import build_model, get_config
+from repro.pim.plan import prepare_params
 from repro.serve.kvcache import cache_pspecs
 from repro.train.loop import make_train_step, shardings_for
 
@@ -174,9 +175,17 @@ def build_train_cell(arch: str, mesh: Mesh, shape_name: str = "train_4k",
 
 def build_serve_cell(arch: str, mesh: Mesh, shape_name: str,
                      cfg: Optional[ModelConfig] = None,
-                     quant_state: Optional[QuantState] = None) -> Cell:
+                     quant_state: Optional[QuantState] = None,
+                     prepare_plan: bool = False) -> Cell:
     """prefill: full-prompt forward writing the cache, next-token logits.
-    decode: one token for every sequence against a seq_len cache."""
+    decode: one token for every sequence against a seq_len cache.
+
+    ``prepare_plan=True`` threads a weight-stationary ``PimPlan`` (built
+    allocation-free via ``jax.eval_shape`` over ``prepare_params``) through
+    the step as an extra argument — the same programming-cache contract the
+    ServeEngine uses, so dry-run compiles cover the prepared datapath.  The
+    plan argument is replicated: plan payloads are derived weight images
+    whose padded shapes fall outside the param sharding rule table."""
     cfg = cfg or get_config(arch)
     # serving runs the paper's datapath: weights bf16, TRQ backend ON
     cfg = cfg.replace(param_dtype="bfloat16", remat="none")
@@ -198,31 +207,38 @@ def build_serve_cell(arch: str, mesh: Mesh, shape_name: str,
         c_sh = cache_pspecs(mesh, cfg, cache_s, b)
         batch_s = input_specs(cfg, shape)
         b_sh = batch_shardings(mesh, batch_s)
+        plan_s = None
+        pl_sh = None
+        if prepare_plan:
+            plan_s = jax.eval_shape(
+                lambda p: prepare_params(p, cfg, quant_state=quant_state),
+                params_s)
+            pl_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), plan_s)
 
     if shape.kind == "prefill":
-        def step(params, batch):
+        def step(params, plan, batch):
             with use_mesh(mesh), use_quant_state(quant_state):
                 cache = cache_fn(b, shape.seq_len)
                 logits, new_cache, _ = apply_fn(params, batch, cache=cache,
-                                                mode="prefill")
+                                                mode="prefill", plan=plan)
                 return jnp.argmax(logits[:, -1], -1), new_cache
 
         return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
-                    args=(params_s, batch_s),
-                    in_shardings=(p_sh, b_sh),
+                    args=(params_s, plan_s, batch_s),
+                    in_shardings=(p_sh, pl_sh, b_sh),
                     out_shardings=(None, c_sh))
 
-    def step(params, cache, batch):
+    def step(params, plan, cache, batch):
         with use_mesh(mesh), use_quant_state(quant_state):
             logits, new_cache, _ = apply_fn(params, batch, cache=cache,
-                                            mode="decode")
+                                            mode="decode", plan=plan)
             return jnp.argmax(logits[:, -1], -1), new_cache
 
     return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
-                args=(params_s, cache_s, batch_s),
-                in_shardings=(p_sh, c_sh, b_sh),
+                args=(params_s, plan_s, cache_s, batch_s),
+                in_shardings=(p_sh, pl_sh, c_sh, b_sh),
                 out_shardings=(None, c_sh),
-                donate_argnums=(1,))
+                donate_argnums=(2,))
 
 
 def build_cell(arch: str, mesh: Mesh, shape_name: str,

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.trq import TRQParams
 from repro.dist.sharding import shard
+from repro.pim.plan import subplan
 from .layers import apply_rope, init_linear, pim_linear
 
 NEG_INF = -1e30
@@ -36,15 +37,15 @@ def init_attention(key, cfg: ModelConfig, bias: Optional[bool] = None):
 
 
 def _qkv(p, x, cfg: ModelConfig, positions, trq, rope: bool = True,
-         prefix: str = "attn"):
+         prefix: str = "attn", plan=None):
     b, s, _ = x.shape
     hd = cfg.hd
-    q = pim_linear(p["wq"], x, cfg, trq,
-                   name=f"{prefix}/wq").reshape(b, s, cfg.n_heads, hd)
-    k = pim_linear(p["wk"], x, cfg, trq,
-                   name=f"{prefix}/wk").reshape(b, s, cfg.n_kv_heads, hd)
-    v = pim_linear(p["wv"], x, cfg, trq,
-                   name=f"{prefix}/wv").reshape(b, s, cfg.n_kv_heads, hd)
+    q = pim_linear(p["wq"], x, cfg, trq, name=f"{prefix}/wq",
+                   plan=subplan(plan, "wq")).reshape(b, s, cfg.n_heads, hd)
+    k = pim_linear(p["wk"], x, cfg, trq, name=f"{prefix}/wk",
+                   plan=subplan(plan, "wk")).reshape(b, s, cfg.n_kv_heads, hd)
+    v = pim_linear(p["wv"], x, cfg, trq, name=f"{prefix}/wv",
+                   plan=subplan(plan, "wv")).reshape(b, s, cfg.n_kv_heads, hd)
     if rope:
         q = apply_rope(q, positions, cfg)
         k = apply_rope(k, positions, cfg)
@@ -155,7 +156,7 @@ def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
 def apply_attention(p, x, cfg: ModelConfig, positions, *, causal=True,
                     cache: Optional[dict] = None, trq: Optional[TRQParams] = None,
                     rope: bool = True, cont: bool = False,
-                    prefix: str = "attn"):
+                    prefix: str = "attn", plan=None):
     """Returns (out, new_cache).  cache=None -> stateless (training).
 
     Prefill (x seq > 1 with cache) writes k/v at [0, S); decode (seq == 1)
@@ -165,7 +166,8 @@ def apply_attention(p, x, cfg: ModelConfig, positions, *, causal=True,
     len+s so the softmax reduction has exactly the same extent as the
     monolithic prefill it replaces (bitwise parity; see serve/engine.py)."""
     b, s, _ = x.shape
-    q, k, v = _qkv(p, x, cfg, positions, trq, rope=rope, prefix=prefix)
+    q, k, v = _qkv(p, x, cfg, positions, trq, rope=rope, prefix=prefix,
+                   plan=plan)
     qg = _group_q(q, cfg.n_kv_heads)
     cp = cfg.parallelism == "fsdp_cp"
     if cp:
@@ -215,7 +217,8 @@ def apply_attention(p, x, cfg: ModelConfig, positions, *, causal=True,
     o = o.reshape(b, s, cfg.n_heads * cfg.hd)
     o = shard(o, "batch", "seq", None) if cp else \
         shard(o, "batch", None, "heads")
-    return pim_linear(p["wo"], o, cfg, trq, name=f"{prefix}/wo"), new_cache
+    return pim_linear(p["wo"], o, cfg, trq, name=f"{prefix}/wo",
+                      plan=subplan(plan, "wo")), new_cache
 
 
 def _scatter_time(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
@@ -239,12 +242,12 @@ def init_cross_attention(key, cfg: ModelConfig):
 
 def apply_cross_attention(p, x, enc_kv: dict, cfg: ModelConfig,
                           trq: Optional[TRQParams] = None,
-                          prefix: str = "xattn"):
+                          prefix: str = "xattn", plan=None):
     """x: (B,Sd,D); enc_kv: {'k','v'} (B,Se,KV,hd) precomputed from encoder."""
     b, s, _ = x.shape
     hd = cfg.hd
-    q = pim_linear(p["wq"], x, cfg, trq,
-                   name=f"{prefix}/wq").reshape(b, s, cfg.n_heads, hd)
+    q = pim_linear(p["wq"], x, cfg, trq, name=f"{prefix}/wq",
+                   plan=subplan(plan, "wq")).reshape(b, s, cfg.n_heads, hd)
     qg = _group_q(q, cfg.n_kv_heads)
     se = enc_kv["k"].shape[1]
     if s % cfg.attn_chunk_q == 0 and se % cfg.attn_chunk_k == 0 and \
@@ -254,16 +257,17 @@ def apply_cross_attention(p, x, enc_kv: dict, cfg: ModelConfig,
     else:
         o = full_attention(qg, enc_kv["k"], enc_kv["v"], causal=False)
     o = o.reshape(b, s, cfg.n_heads * hd)
-    return pim_linear(p["wo"], o, cfg, trq, name=f"{prefix}/wo")
+    return pim_linear(p["wo"], o, cfg, trq, name=f"{prefix}/wo",
+                      plan=subplan(plan, "wo"))
 
 
 def encoder_kv(p, enc_out: jax.Array, cfg: ModelConfig,
                trq: Optional[TRQParams] = None,
-               prefix: str = "xattn") -> dict:
+               prefix: str = "xattn", plan=None) -> dict:
     b, s, _ = enc_out.shape
     hd = cfg.hd
-    k = pim_linear(p["wk"], enc_out, cfg, trq,
-                   name=f"{prefix}/wk").reshape(b, s, cfg.n_kv_heads, hd)
-    v = pim_linear(p["wv"], enc_out, cfg, trq,
-                   name=f"{prefix}/wv").reshape(b, s, cfg.n_kv_heads, hd)
+    k = pim_linear(p["wk"], enc_out, cfg, trq, name=f"{prefix}/wk",
+                   plan=subplan(plan, "wk")).reshape(b, s, cfg.n_kv_heads, hd)
+    v = pim_linear(p["wv"], enc_out, cfg, trq, name=f"{prefix}/wv",
+                   plan=subplan(plan, "wv")).reshape(b, s, cfg.n_kv_heads, hd)
     return {"k": k, "v": v}

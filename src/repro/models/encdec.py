@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import shard
 from repro.pim.backend import reemit_ad_ops, traced_ad_ops
+from repro.pim.plan import PimPlan, subplan
 from .attention import (apply_attention, apply_cross_attention, encoder_kv,
                         init_attention, init_cross_attention)
 from .layers import (cdtype, embed, init_embed, init_linear, init_mlp,
@@ -63,50 +64,59 @@ def init_encdec(key, cfg: ModelConfig):
     }
 
 
-def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+def encode(params, frames: jax.Array, cfg: ModelConfig,
+           plan=None) -> jax.Array:
     """frames: (B, T, D) precomputed frame embeddings (stub frontend)."""
     x = pim_linear(params["frontend"]["frame_proj"],
                    frames.astype(cdtype(cfg)), cfg,
-                   name="frontend/frame_proj")
+                   name="frontend/frame_proj",
+                   plan=subplan(subplan(plan, "frontend"), "frame_proj"))
     x = x + sinusoid_pos(x.shape[1], cfg.d_model, x.dtype)[None]
     x = shard(x, "batch", "seq", None)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
 
-    def body(carry, lp):
+    def body(carry, inputs):
         x_, ops_ = carry
+        lp, lpl = inputs
         with traced_ad_ops() as tally:
             h = layernorm(lp["ln1"], x_, cfg.norm_eps)
             o, _ = apply_attention(lp["attn"], h, cfg, positions,
                                    causal=False, rope=False,
-                                   prefix="enc/attn")
+                                   prefix="enc/attn",
+                                   plan=subplan(lpl, "attn"))
             x_ = x_ + o
             h = layernorm(lp["ln2"], x_, cfg.norm_eps)
-            x_ = x_ + apply_mlp(lp["mlp"], h, cfg, prefix="enc/mlp")
+            x_ = x_ + apply_mlp(lp["mlp"], h, cfg, prefix="enc/mlp",
+                                plan=subplan(lpl, "mlp"))
         return (shard(x_, "batch", "seq", None), ops_ + tally.value), None
 
     body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
-    (x, ops), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)), params["enc"])
+    (x, ops), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)),
+                               (params["enc"], subplan(plan, "enc")))
     reemit_ad_ops(ops)
     return layernorm(params["enc_norm"], x, cfg.norm_eps)
 
 
-def cross_kv(params, enc_out: jax.Array, cfg: ModelConfig):
+def cross_kv(params, enc_out: jax.Array, cfg: ModelConfig, plan=None):
     """Per-decoder-layer cross KV, stacked on the layer axis."""
-    def one(lp):
+    def one(lp, lpl):
         # per-layer tally: the pim_linear emissions are vmap-trace tracers,
         # returned as a stacked (L,) leaf and re-emitted reduced
         with traced_ad_ops() as tally:
-            kv = encoder_kv(lp["xattn"], enc_out, cfg, prefix="dec/xattn")
+            kv = encoder_kv(lp["xattn"], enc_out, cfg, prefix="dec/xattn",
+                            plan=subplan(lpl, "xattn"))
         return kv, tally.value
-    kv, ops = jax.vmap(one, in_axes=0, out_axes=0)(params["dec"])
+    kv, ops = jax.vmap(one, in_axes=0, out_axes=0)(params["dec"],
+                                                   subplan(plan, "dec"))
     reemit_ad_ops(jnp.sum(ops))
     return kv
 
 
 def decode_stack(params, tokens: jax.Array, enc_out: Optional[jax.Array],
                  cfg: ModelConfig, *, cache: Optional[dict] = None,
-                 xkv: Optional[dict] = None, mode: str = "train"):
+                 xkv: Optional[dict] = None, mode: str = "train",
+                 plan=None):
     """tokens: (B, Sd).  Either enc_out or precomputed xkv must be given.
     Returns (logits, new_cache)."""
     x = embed(params["embed"], tokens).astype(cdtype(cfg))
@@ -119,28 +129,32 @@ def decode_stack(params, tokens: jax.Array, enc_out: Optional[jax.Array],
     x = x + _sinusoid_at(positions, cfg.d_model).astype(x.dtype)
     x = shard(x, "batch", "seq", None)
     if xkv is None:
-        xkv = cross_kv(params, enc_out, cfg)
+        xkv = cross_kv(params, enc_out, cfg, plan=plan)
 
     def body(carry, inputs):
         x_, ops_ = carry
-        lp, lc, lxkv = inputs
+        lp, lc, lxkv, lpl = inputs
         with traced_ad_ops() as tally:
             h = layernorm(lp["ln1"], x_, cfg.norm_eps)
             o, nc = apply_attention(lp["attn"], h, cfg, positions,
-                                    cache=lc, rope=False, prefix="dec/attn")
+                                    cache=lc, rope=False, prefix="dec/attn",
+                                    plan=subplan(lpl, "attn"))
             x_ = x_ + o
             h = layernorm(lp["ln_x"], x_, cfg.norm_eps)
             x_ = x_ + apply_cross_attention(lp["xattn"], h, lxkv, cfg,
-                                            prefix="dec/xattn")
+                                            prefix="dec/xattn",
+                                            plan=subplan(lpl, "xattn"))
             h = layernorm(lp["ln2"], x_, cfg.norm_eps)
-            x_ = x_ + apply_mlp(lp["mlp"], h, cfg, prefix="dec/mlp")
+            x_ = x_ + apply_mlp(lp["mlp"], h, cfg, prefix="dec/mlp",
+                                plan=subplan(lpl, "mlp"))
         x_ = shard(x_, "batch", "seq", None)
         return (x_, ops_ + tally.value), (nc if lc is not None else 0)
 
     body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
     layer_cache = cache["layers"] if cache is not None else None
     (x, ops), new_layer_cache = jax.lax.scan(
-        body_fn, (x, jnp.float32(0)), (params["dec"], layer_cache, xkv))
+        body_fn, (x, jnp.float32(0)),
+        (params["dec"], layer_cache, xkv, subplan(plan, "dec")))
     reemit_ad_ops(ops)
 
     x = layernorm(params["dec_norm"], x, cfg.norm_eps)
@@ -176,25 +190,28 @@ def init_dec_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def apply_encdec(params, batch: dict, cfg: ModelConfig, *,
-                 cache: Optional[dict] = None, mode: str = "train"):
+                 cache: Optional[dict] = None, mode: str = "train",
+                 plan: Optional[PimPlan] = None):
     """batch: {'embeds': (B,T,D) frames, 'tokens': (B,Sd)} (train/prefill)
     or {'tokens': (B,1)} (decode; cross-KV lives in the cache).
 
     Returns (logits, cache|None, aux).  The serving cache is
     {'layers': self-attn KV, 'len0': dec position, 'xkv': cross KV}."""
+    pl = plan.layers if isinstance(plan, PimPlan) else plan
     if mode == "decode":
         inner = {"layers": cache["layers"], "len0": cache["len0"]}
         logits, nc = decode_stack(params, batch["tokens"], None, cfg,
-                                  cache=inner, xkv=cache["xkv"], mode=mode)
+                                  cache=inner, xkv=cache["xkv"], mode=mode,
+                                  plan=pl)
         nc["xkv"] = cache["xkv"]
         return logits, nc, jnp.float32(0)
-    enc_out = encode(params, batch["embeds"], cfg)
-    xkv = cross_kv(params, enc_out, cfg)
+    enc_out = encode(params, batch["embeds"], cfg, plan=pl)
+    xkv = cross_kv(params, enc_out, cfg, plan=pl)
     inner = None
     if cache is not None:
         inner = {"layers": cache["layers"], "len0": cache["len0"]}
     logits, nc = decode_stack(params, batch["tokens"], None, cfg,
-                              cache=inner, xkv=xkv, mode=mode)
+                              cache=inner, xkv=xkv, mode=mode, plan=pl)
     if nc is not None:
         # zero-pad the fresh cross-KV out to the cache's enc_len buffer so
         # scattering it into a serving slot overwrites the WHOLE row —

@@ -10,6 +10,7 @@ from repro.configs.base import ModelConfig, TRQConfig
 from repro.core.quant_state import active_quant_state
 from repro.core.trq import TRQParams
 from repro.pim.backend import active_backend, get_backend, record_ad_ops
+from repro.pim.plan import LayerPlan, run_prepared, subplan
 from repro.dist.sharding import shard
 
 
@@ -45,7 +46,8 @@ def init_linear(key, d_in: int, d_out: int, cfg: ModelConfig,
 
 def pim_linear(p: dict, x: jax.Array, cfg: ModelConfig,
                trq: Optional[TRQParams] = None,
-               name: Optional[str] = None) -> jax.Array:
+               name: Optional[str] = None,
+               plan: Optional[LayerPlan] = None) -> jax.Array:
     """x @ w on the selected PIM execution backend.
 
     The datapath is a name in the ``repro.pim.backend`` registry (exact |
@@ -58,27 +60,45 @@ def pim_linear(p: dict, x: jax.Array, cfg: ModelConfig,
     model-wide ``cfg.trq`` default (with auto-ranging — calibrated registers
     are exact and disable it).  Every backend's A/D-operation count is
     forwarded to any enclosing ``ad_ops_tally()``.
+
+    ``plan`` (a :class:`~repro.pim.plan.LayerPlan` from ``prepare_params``)
+    runs the prepared fast path instead — bitwise identical, but with all
+    weight-side work done once at programming time.  The plan is used only
+    when it was built for the selected backend and no explicit ``trq``
+    overrides it, so ``use_backend(...)`` A/B sweeps still work with a plan
+    threaded; a plan whose geometry mismatches ``p['w']`` raises (stale
+    guard).
     """
     w = p["w"]
-    if cfg.parallelism == "fsdp_cp" and w.ndim == 2:
-        # ZeRO-3-style: gather the (sharded) weight, compute seq-local.
-        # The AG has no dependence on the previous layer's activations, so
-        # the latency-hiding scheduler prefetches it under compute.
-        w = shard(w, None, None)
-
     backend_name = active_backend() or cfg.pim_backend
-    t = trq
-    if t is None:
-        qs = active_quant_state()
-        if qs is not None:
-            t = qs.lookup(name)
-    auto_range = t is None and cfg.trq.auto_range
-    if t is None:
-        t = trq_params_from_cfg(cfg.trq)
+    if plan is not None and isinstance(plan, LayerPlan) and \
+            plan.backend == backend_name and trq is None:
+        if tuple(w.shape[-2:]) != (plan.k, plan.n):
+            raise ValueError(
+                f"stale plan at {name!r}: programmed for "
+                f"({plan.k}, {plan.n}) but params have "
+                f"{tuple(w.shape[-2:])}; re-run prepare_params")
+        out = run_prepared(x, plan, ste=True)
+    else:
+        if cfg.parallelism == "fsdp_cp" and w.ndim == 2:
+            # ZeRO-3-style: gather the (sharded) weight, compute seq-local.
+            # The AG has no dependence on the previous layer's activations,
+            # so the latency-hiding scheduler prefetches it under compute.
+            w = shard(w, None, None)
 
-    out = get_backend(backend_name)(
-        x, w.astype(x.dtype), t, ste=True, auto_range=auto_range,
-        delta_grid=cfg.trq.delta_grid)
+        t = trq
+        if t is None:
+            qs = active_quant_state()
+            if qs is not None:
+                t = qs.lookup(name)
+        auto_range = t is None and cfg.trq.auto_range
+        if t is None:
+            t = trq_params_from_cfg(cfg.trq)
+
+        out = get_backend(backend_name)(
+            x, w.astype(x.dtype), t, ste=True, auto_range=auto_range,
+            delta_grid=cfg.trq.delta_grid)
+
     record_ad_ops(name, out.ad_ops)
     y = out.y
     if "b" in p:
@@ -165,14 +185,17 @@ def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None,
 
 def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig,
               trq: Optional[TRQParams] = None,
-              prefix: str = "mlp") -> jax.Array:
-    up = pim_linear(p["w_up"], x, cfg, trq, name=f"{prefix}/w_up")
+              prefix: str = "mlp", plan=None) -> jax.Array:
+    up = pim_linear(p["w_up"], x, cfg, trq, name=f"{prefix}/w_up",
+                    plan=subplan(plan, "w_up"))
     if cfg.mlp_act == "silu":
-        gate = pim_linear(p["w_gate"], x, cfg, trq, name=f"{prefix}/w_gate")
+        gate = pim_linear(p["w_gate"], x, cfg, trq, name=f"{prefix}/w_gate",
+                          plan=subplan(plan, "w_gate"))
         h = jax.nn.silu(gate) * up
     else:
         h = jax.nn.gelu(up)
     if h.ndim == 3:
         h = shard(h, "batch", "seq", None) if cfg.parallelism == "fsdp_cp" \
             else shard(h, "batch", None, "ffn")
-    return pim_linear(p["w_down"], h, cfg, trq, name=f"{prefix}/w_down")
+    return pim_linear(p["w_down"], h, cfg, trq, name=f"{prefix}/w_down",
+                      plan=subplan(plan, "w_down"))

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import shard
 from repro.pim.backend import reemit_ad_ops, traced_ad_ops
+from repro.pim.plan import PimPlan, subplan
 from .attention import apply_attention, init_attention
 from .layers import cdtype, embed, init_embed, init_linear, init_mlp, \
     init_rmsnorm, apply_mlp, pim_linear, rmsnorm
@@ -105,7 +106,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def _apply_layer(p, x, cfg: ModelConfig, idx: int, positions,
                  cache: Optional[dict], aux, depth0: int = 0,
-                 cont: bool = False):
+                 cont: bool = False, plan=None):
     mixer, ffn = cfg.layer_kind(idx)
     # per-layer name prefix for QuantState register lookup.  idx is the
     # position inside the repeating period (static under the period scan),
@@ -118,13 +119,16 @@ def _apply_layer(p, x, cfg: ModelConfig, idx: int, positions,
     if mixer == "attn":
         o, new_cache = apply_attention(p["attn"], h, cfg, positions,
                                        cache=cache, cont=cont,
-                                       prefix=f"{lname}/attn")
+                                       prefix=f"{lname}/attn",
+                                       plan=subplan(plan, "attn"))
     elif mixer == "mamba":
         o, new_cache = apply_mamba(p["mamba"], h, cfg, cache=cache,
-                                   prefix=f"{lname}/mamba")
+                                   prefix=f"{lname}/mamba",
+                                   plan=subplan(plan, "mamba"))
     else:
         o, new_cache = apply_rwkv(p["rwkv"], h, cfg, cache=cache,
-                                  prefix=f"{lname}/rwkv")
+                                  prefix=f"{lname}/rwkv",
+                                  plan=subplan(plan, "rwkv"))
     if cfg.remat == "names":
         # checkpoint the mixer OUTPUT: backward reuses it instead of
         # re-running the flash kv scan (seq-sharded -> ~25MB/layer/device)
@@ -135,32 +139,36 @@ def _apply_layer(p, x, cfg: ModelConfig, idx: int, positions,
 
     h = rmsnorm(p["norm2"], x, cfg.norm_eps)
     if ffn == "mlp":
-        x = x + apply_mlp(p["mlp"], h, cfg, prefix=f"{lname}/mlp")
+        x = x + apply_mlp(p["mlp"], h, cfg, prefix=f"{lname}/mlp",
+                          plan=subplan(plan, "mlp"))
     elif ffn == "moe":
         mo, a = apply_moe(p["moe"], h, cfg)
         x, aux = x + mo, aux + a
     else:                                   # moe+mlp (arctic parallel)
         mo, a = apply_moe(p["moe"], h, cfg)
-        x = x + mo + apply_mlp(p["mlp"], h, cfg, prefix=f"{lname}/mlp")
+        x = x + mo + apply_mlp(p["mlp"], h, cfg, prefix=f"{lname}/mlp",
+                               plan=subplan(plan, "mlp"))
         aux = aux + a
     x = shard(x, "batch", "seq", None)
     return x, new_cache, aux
 
 
-def _embed_inputs(params, batch: dict, cfg: ModelConfig):
+def _embed_inputs(params, batch: dict, cfg: ModelConfig, plan=None):
     """tokens (+ optional frontend embeds as a sequence prefix) -> (B,S,D)."""
     x = embed(params["embed"], batch["tokens"])
     if cfg.frontend in ("patch", "frames") and "embeds" in batch:
         name = "patch_proj" if cfg.frontend == "patch" else "frame_proj"
         fe = pim_linear(params["frontend"][name],
                         batch["embeds"].astype(x.dtype), cfg,
-                        name=f"frontend/{name}")
+                        name=f"frontend/{name}",
+                        plan=subplan(subplan(plan, "frontend"), name))
         x = jnp.concatenate([fe, x], axis=1)
     return x
 
 
 def apply_lm(params, batch: dict, cfg: ModelConfig, *,
-             cache: Optional[dict] = None, mode: str = "train"):
+             cache: Optional[dict] = None, mode: str = "train",
+             plan: Optional[PimPlan] = None):
     """batch: {'tokens': (B,S) int32, optional 'embeds': (B,F,D),
     optional 'positions': (B,S)}.
 
@@ -171,9 +179,13 @@ def apply_lm(params, batch: dict, cfg: ModelConfig, *,
     from the cached state on the ordinary prefill path already; only
     attention needs the explicit flag.
 
-    Returns (logits, new_cache, aux_loss)."""
+    ``plan`` threads a :class:`~repro.pim.plan.PimPlan` (the crossbar
+    programming cache) alongside the params: its stacked subtrees ride the
+    period scan with them, so every ``pim_linear`` sees its own programmed
+    ``LayerPlan``.  Returns (logits, new_cache, aux_loss)."""
     cont = mode == "prefill_cont"
-    x = _embed_inputs(params, batch, cfg).astype(cdtype(cfg))
+    pl = plan.layers if isinstance(plan, PimPlan) else plan
+    x = _embed_inputs(params, batch, cfg, plan=pl).astype(cdtype(cfg))
     b, s, _ = x.shape
     x = shard(x, "batch", "seq", None)
     if "positions" in batch:
@@ -189,14 +201,15 @@ def apply_lm(params, batch: dict, cfg: ModelConfig, *,
         # the scan trace, so they are drained into the carry here and
         # re-emitted to the enclosing traced_ad_ops tally after the scan
         x_, aux_, ops_ = carry
-        pp, pc = inputs
+        pp, pc, ppl = inputs
         new_pc = {}
         with traced_ad_ops() as tally:
             for i in range(cfg.period):
                 lp = pp[f"layer_{i}"]
                 lc = pc[f"layer_{i}"] if pc is not None else None
                 x_, nc, aux_ = _apply_layer(lp, x_, cfg, i, positions, lc,
-                                            aux_, depth0=depth0, cont=cont)
+                                            aux_, depth0=depth0, cont=cont,
+                                            plan=subplan(ppl, f"layer_{i}"))
                 new_pc[f"layer_{i}"] = nc
         return (x_, aux_, ops_ + tally.value), \
             (new_pc if pc is not None else 0)
@@ -213,10 +226,11 @@ def apply_lm(params, batch: dict, cfg: ModelConfig, *,
             policy = jax.checkpoint_policies.nothing_saveable
         return jax.checkpoint(fn, policy=policy)
 
+    plan_periods = subplan(pl, "periods")
     if cfg.scan_layers:
         (x, aux, ops), new_cache = jax.lax.scan(
             wrap(period_body), (x, jnp.float32(0), jnp.float32(0)),
-            (params["periods"], cache))
+            (params["periods"], cache, plan_periods))
     else:
         new_caches = []
         aux = jnp.float32(0)
@@ -224,9 +238,11 @@ def apply_lm(params, batch: dict, cfg: ModelConfig, *,
         for pi in range(cfg.n_periods):
             pp = jax.tree.map(lambda t: t[pi], params["periods"])
             pc = jax.tree.map(lambda t: t[pi], cache) if cache is not None else None
+            ppl = jax.tree.map(lambda t: t[pi], plan_periods) \
+                if plan_periods is not None else None
             body = wrap(functools.partial(period_body,
                                           depth0=pi * cfg.period))
-            (x, aux, ops), nc = body((x, aux, ops), (pp, pc))
+            (x, aux, ops), nc = body((x, aux, ops), (pp, pc, ppl))
             new_caches.append(nc)
         new_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *new_caches) \
             if cache is not None else 0
@@ -245,8 +261,8 @@ def apply_lm(params, batch: dict, cfg: ModelConfig, *,
         logits = x.astype(jnp.float32) @ params["embed"]["tok"].astype(
             jnp.float32).T
     else:
-        logits = pim_linear(params["lm_head"], x, cfg,
-                            name="lm_head").astype(jnp.float32)
+        logits = pim_linear(params["lm_head"], x, cfg, name="lm_head",
+                            plan=subplan(pl, "lm_head")).astype(jnp.float32)
     logits = shard(logits, "batch", None, "vocab")
     return logits, (new_cache if cache is not None else None), aux
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.trq import TRQParams
 from repro.dist.sharding import shard
+from repro.pim.plan import subplan
 from .layers import pdtype, init_linear, pim_linear
 
 
@@ -48,14 +49,16 @@ def init_mamba(key, cfg: ModelConfig):
     }
 
 
-def _ssm_coeffs(p, xc, cfg: ModelConfig, trq, prefix: str = "mamba"):
+def _ssm_coeffs(p, xc, cfg: ModelConfig, trq, prefix: str = "mamba",
+                plan=None):
     """xc: (B,S,di) post-conv activations -> (delta (B,S,di) f32,
     B_t (B,S,ds), C_t (B,S,ds)).  The (B,S,di,ds) decay/drive tensors are
     NOT formed here — they are materialized chunk-by-chunk inside the scan
     (live bytes O(chunk), not O(S))."""
     ds = cfg.ssm_d_state
     dt_rank = p["dt_proj"].shape[0]
-    proj = pim_linear(p["x_proj"], xc, cfg, trq, name=f"{prefix}/x_proj")
+    proj = pim_linear(p["x_proj"], xc, cfg, trq, name=f"{prefix}/x_proj",
+                      plan=subplan(plan, "x_proj"))
     dt_r, b_, c_ = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
     delta = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
                             + p["dt_bias"])                   # (B,S,di)
@@ -113,11 +116,13 @@ def causal_conv(x, w, state: Optional[jax.Array] = None):
 
 
 def apply_mamba(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
-                trq: Optional[TRQParams] = None, prefix: str = "mamba"):
+                trq: Optional[TRQParams] = None, prefix: str = "mamba",
+                plan=None):
     """x: (B,S,D).  cache (decode): {'h': (B,di,ds), 'conv': (B,dc-1,di)}."""
     b, s, _ = x.shape
     di, ds = d_inner(cfg), cfg.ssm_d_state
-    xz = pim_linear(p["in_proj"], x, cfg, trq, name=f"{prefix}/in_proj")
+    xz = pim_linear(p["in_proj"], x, cfg, trq, name=f"{prefix}/in_proj",
+                    plan=subplan(plan, "in_proj"))
     xi, z = jnp.split(xz, 2, axis=-1)
     xi = shard(xi, "batch", None, "inner")
 
@@ -125,7 +130,7 @@ def apply_mamba(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
     xc, conv_state = causal_conv(xi, p["conv_w"].astype(xi.dtype), conv_state)
     xc = jax.nn.silu(xc)
 
-    delta, b_, c_ = _ssm_coeffs(p, xc, cfg, trq, prefix=prefix)
+    delta, b_, c_ = _ssm_coeffs(p, xc, cfg, trq, prefix=prefix, plan=plan)
     a_neg = jnp.exp(p["a_log"])                           # (di, ds) "A"
     h0 = cache["h"] if cache else jnp.zeros((b, di, ds), jnp.float32)
 
@@ -149,6 +154,7 @@ def apply_mamba(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
 
     y = y + xc.astype(jnp.float32) * p["d"]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    out = pim_linear(p["out_proj"], y, cfg, trq, name=f"{prefix}/out_proj")
+    out = pim_linear(p["out_proj"], y, cfg, trq, name=f"{prefix}/out_proj",
+                     plan=subplan(plan, "out_proj"))
     new_cache = {"h": h_last, "conv": conv_state} if cache is not None else None
     return out, new_cache

@@ -40,9 +40,9 @@ def build_model(cfg: ModelConfig):
         def init_fn(key):
             return encdec.init_encdec(key, cfg)
 
-        def apply_fn(params, batch, cache=None, mode="train"):
+        def apply_fn(params, batch, cache=None, mode="train", plan=None):
             return encdec.apply_encdec(params, batch, cfg, cache=cache,
-                                       mode=mode)
+                                       mode=mode, plan=plan)
 
         def cache_fn(batch_size, max_len, dtype=None):
             import jax.numpy as jnp
@@ -56,8 +56,9 @@ def build_model(cfg: ModelConfig):
     def init_fn(key):
         return lm.init_lm(key, cfg)
 
-    def apply_fn(params, batch, cache=None, mode="train"):
-        return lm.apply_lm(params, batch, cfg, cache=cache, mode=mode)
+    def apply_fn(params, batch, cache=None, mode="train", plan=None):
+        return lm.apply_lm(params, batch, cfg, cache=cache, mode=mode,
+                           plan=plan)
 
     def cache_fn(batch_size, max_len, dtype=None):
         import jax.numpy as jnp

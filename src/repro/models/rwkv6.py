@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.trq import TRQParams
+from repro.pim.plan import subplan
 from .layers import pdtype, init_linear, pim_linear
 
 
@@ -109,7 +110,8 @@ def wkv_scan(r, k, v, logw, u, s0, chunk: int):
 
 
 def apply_rwkv(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
-               trq: Optional[TRQParams] = None, prefix: str = "rwkv"):
+               trq: Optional[TRQParams] = None, prefix: str = "rwkv",
+               plan=None):
     """x: (B,S,D).  cache (decode/prefill): {'s': (B,H,hs,hs) f32,
     'x_prev': (B,1,D)}."""
     b, s, d = x.shape
@@ -121,13 +123,14 @@ def apply_rwkv(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
     mu = p["mu"].astype(x.dtype)
     xr, xk, xv, xw, xg = (x + mu[i] * (xs - x) for i in range(5))
 
-    r = pim_linear(p["w_r"], xr, cfg, trq,
-                   name=f"{prefix}/w_r").astype(jnp.float32)
-    k = pim_linear(p["w_k"], xk, cfg, trq,
-                   name=f"{prefix}/w_k").astype(jnp.float32)
-    v = pim_linear(p["w_v"], xv, cfg, trq,
-                   name=f"{prefix}/w_v").astype(jnp.float32)
-    g = pim_linear(p["w_g"], xg, cfg, trq, name=f"{prefix}/w_g")
+    r = pim_linear(p["w_r"], xr, cfg, trq, name=f"{prefix}/w_r",
+                   plan=subplan(plan, "w_r")).astype(jnp.float32)
+    k = pim_linear(p["w_k"], xk, cfg, trq, name=f"{prefix}/w_k",
+                   plan=subplan(plan, "w_k")).astype(jnp.float32)
+    v = pim_linear(p["w_v"], xv, cfg, trq, name=f"{prefix}/w_v",
+                   plan=subplan(plan, "w_v")).astype(jnp.float32)
+    g = pim_linear(p["w_g"], xg, cfg, trq, name=f"{prefix}/w_g",
+                   plan=subplan(plan, "w_g"))
     # data-dependent decay (the Finch feature): w in (0,1), log w <= 0
     lora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_lora_a"].astype(jnp.float32)
                     ) @ p["decay_lora_b"].astype(jnp.float32)
@@ -165,7 +168,8 @@ def apply_rwkv(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
          ).reshape(b, s, h * hs)
     y = y * p["ln_x"]["scale"] + p["ln_x"]["bias"]
     y = (y.astype(x.dtype) * jax.nn.silu(g))
-    out = pim_linear(p["w_o"], y, cfg, trq, name=f"{prefix}/w_o")
+    out = pim_linear(p["w_o"], y, cfg, trq, name=f"{prefix}/w_o",
+                     plan=subplan(plan, "w_o"))
     new_cache = ({"s": s_end, "x_prev": x[:, -1:]}
                  if cache is not None else None)
     return out, new_cache

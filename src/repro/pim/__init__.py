@@ -11,15 +11,25 @@
               shift-and-add merge (the oracle for the Pallas kernels).
 ``mapping``   layer -> crossbar tiling, im2col for convolutions, and the
               per-layer conversion counts the energy model consumes.
+``plan``      the crossbar programming cache: ``prepare_params`` walks a
+              model pytree once and freezes every layer's weight-side
+              state (grid scales, registers, cell planes, tile images)
+              into a ``PimPlan``; ``pim_mvm(x, plan=...)`` then skips all
+              weight-side recomputation — the weight-stationary premise
+              (paper §II) as an artifact.
 """
 from .crossbar import (PimConfig, auto_range_fit, bit_exact_mvm,
                        fake_quant_mvm, collect_bl_samples, offset_encode,
-                       bitplanes)
+                       bitplanes, group_weights, group_activations,
+                       weight_planes)
 from .mapping import LayerMapping, map_linear, map_conv2d, conv2d_pim, im2col
 from .backend import (PimOut, PimBackend, register_backend, get_backend,
                       list_backends, use_backend, active_backend, pim_mvm,
                       ad_ops_tally, AdOpsTally, traced_ad_ops, TracedAdOps,
                       reemit_ad_ops)
+from .plan import (LayerPlan, PimPlan, prepare_linear, prepare_params,
+                   check_plan, subplan, register_prepared, run_prepared,
+                   has_prepared, quant_state_token)
 # per-layer register state rides with the backend API (defined in core to
 # keep the dependency direction core <- pim)
 from repro.core.quant_state import (QuantState, use_quant_state,
@@ -36,9 +46,14 @@ __all__ = [
     # per-layer registers
     "QuantState", "use_quant_state", "active_quant_state",
     "quant_state_from_calibration", "save_quant_state", "load_quant_state",
+    # crossbar programming cache (weight-stationary plans)
+    "LayerPlan", "PimPlan", "prepare_linear", "prepare_params",
+    "check_plan", "subplan", "register_prepared", "run_prepared",
+    "has_prepared", "quant_state_token",
     # behavioral simulator
     "PimConfig", "bit_exact_mvm", "fake_quant_mvm", "auto_range_fit",
-    "collect_bl_samples", "offset_encode", "bitplanes",
+    "collect_bl_samples", "offset_encode", "bitplanes", "group_weights",
+    "group_activations", "weight_planes",
     # layer mapping
     "LayerMapping", "map_linear", "map_conv2d", "conv2d_pim", "im2col",
 ]

@@ -130,6 +130,8 @@ class AdOpsTally:
         self.by_layer[name] = self.by_layer.get(name, 0.0) + ops
 
     def total(self) -> float:
+        if not self.by_layer:
+            return 0.0          # keep the empty tally float-typed
         return float(sum(jnp.asarray(v) for v in self.by_layer.values()))
 
 
@@ -216,6 +218,17 @@ def record_ad_ops(name: Optional[str], ops) -> None:
 # the four stock backends
 # ---------------------------------------------------------------------------
 
+def _stable_recip(s):
+    """1/s rounded to bf16 then widened back to f32: a determinism barrier.
+    XLA lowers f32 division differently between eager and fused contexts
+    (true divide vs refined reciprocal, last-ulp differences); the bf16
+    rounding absorbs that jitter so ``x * _stable_recip(s)`` — an EXACT f32
+    multiply — quantizes identically everywhere.  Scale precision is 8
+    mantissa bits, irrelevant next to the k-bit integer grid it feeds."""
+    return jnp.asarray(1.0 / jnp.asarray(s, jnp.float32),
+                       jnp.bfloat16).astype(jnp.float32)
+
+
 def _dynamic_scales(x, w, a_scale, w_scale, levels: float = 127.0):
     """Max-abs per-tensor scales mapping partial sums onto the ADC integer
     grid (None -> dynamic; explicit values pass through for calibrated or
@@ -285,15 +298,24 @@ def bit_exact_backend(x, w, trq, *, a_scale=None, w_scale=None,
     lead = x.shape[:-1]
     half_a = 2 ** (pim.k_i - 1)
     half_w = 2 ** (pim.k_w - 1)
-    a_s = a_scale if a_scale is not None else \
-        jnp.maximum(jnp.max(jnp.abs(x)), 1e-6) / float(half_a - 1)
-    w_s = w_scale if w_scale is not None else \
-        jnp.maximum(jnp.max(jnp.abs(w)), 1e-6) / float(half_w - 1)
-
+    # The PTQ quantizer must be CONTEXT-STABLE: the programming cache
+    # (repro.pim.plan) precomputes the weight side eagerly, while this
+    # dynamic path runs fused inside jit/scan — and XLA's division lowering
+    # (and bf16 intermediate rounding) differ between those contexts,
+    # flipping whole integer steps at rounding boundaries.  So the chain is
+    # f32 end-to-end, scales come from EXACT multiplies by reciprocal
+    # constants, and the elementwise step divides via a bf16-rounded
+    # reciprocal (exact f32 multiply after a deterministic barrier).
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    a_int = jnp.clip(jnp.floor(x2 / a_s + 0.5), -half_a, half_a - 1
-                     ).astype(jnp.int32)
-    w_int = jnp.clip(jnp.floor(w.astype(jnp.float32) / w_s + 0.5),
+    wf = w.astype(jnp.float32)
+    a_s = a_scale if a_scale is not None else \
+        jnp.maximum(jnp.max(jnp.abs(x2)), 1e-6) * (1.0 / (half_a - 1))
+    w_s = w_scale if w_scale is not None else \
+        jnp.maximum(jnp.max(jnp.abs(wf)), 1e-6) * (1.0 / (half_w - 1))
+
+    a_int = jnp.clip(jnp.floor(x2 * _stable_recip(a_s) + 0.5),
+                     -half_a, half_a - 1).astype(jnp.int32)
+    w_int = jnp.clip(jnp.floor(wf * _stable_recip(w_s) + 0.5),
                      -half_w, half_w - 1).astype(jnp.int32)
     # the 1-bit DACs feed unsigned slices: offset-encode the activations and
     # correct digitally, exactly like the weight zero-point in the sim
@@ -309,9 +331,39 @@ def bit_exact_backend(x, w, trq, *, a_scale=None, w_scale=None,
 # functional entry point
 # ---------------------------------------------------------------------------
 
-def pim_mvm(x: jax.Array, w: jax.Array, trq: Optional[TRQParams] = None,
-            backend: Optional[str] = None, **knobs) -> PimOut:
+def pim_mvm(x: jax.Array, w: Optional[jax.Array] = None,
+            trq: Optional[TRQParams] = None,
+            backend: Optional[str] = None, *, plan=None,
+            **knobs) -> PimOut:
     """Run ``x @ w`` on a named datapath (default: the ambient
-    ``use_backend`` selection, else ``exact``) and return ``PimOut``."""
+    ``use_backend`` selection, else ``exact``) and return ``PimOut``.
+
+    Prepared fast path: ``pim_mvm(x, plan=<LayerPlan>)`` executes against a
+    crossbar image programmed once by ``repro.pim.plan`` — bitwise
+    identical to the dynamic call, with all weight-side work (max-|w| grid
+    scale, dtype cast, bit-plane slicing, tile padding) hoisted out of the
+    call.  Knob precedence with ``plan``:
+
+    * ``w`` and ``trq`` must be ``None`` — the plan IS the weight-side
+      state (passing either raises, so a stale call site can't silently
+      shadow the programmed registers);
+    * ``backend=`` may be given but must equal ``plan.backend`` (prepared
+      payloads are backend-specific; mismatch raises);
+    * plan-frozen knobs — ``w_scale``, ``auto_range``, ``delta_grid``,
+      ``pim``, tile geometry — come from the plan; explicit
+      ``w_scale=``/``a_scale=`` still override for test-pinned grids
+      (except ``bit_exact``, whose programmed cell planes are a function
+      of the weight scale — a ``w_scale`` override there raises);
+    * per-call knobs (``a_scale``, ``ste``, ``interpret``) pass through
+      unchanged.
+    """
+    if plan is not None:
+        if w is not None or trq is not None:
+            raise ValueError("pim_mvm(plan=...) carries the weight-side "
+                             "state; pass w=None and trq=None (explicit "
+                             "per-call registers would shadow the "
+                             "programmed plan)")
+        from .plan import run_prepared      # lazy: plan imports this module
+        return run_prepared(x, plan, backend=backend, **knobs)
     name = backend or active_backend() or "exact"
     return get_backend(name)(x, w, trq, **knobs)

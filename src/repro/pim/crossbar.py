@@ -90,23 +90,52 @@ def _shift_add(y_q: jax.Array, cfg: PimConfig) -> jax.Array:
     return jnp.einsum("ijgmn,i,j->mn", y_q, bi, bj)
 
 
-def bit_exact_mvm(a_uint: jax.Array, w_int: jax.Array,
+def weight_planes(w_int: jax.Array, cfg: PimConfig = PimConfig()) -> jax.Array:
+    """Offset-encode + bit-slice + group a signed weight matrix ONCE.
+
+    w_int: (..., K, N) signed ints -> (..., k_w, G, X, N) 0/1 planes (int8):
+    the exact cell conductance pattern a crossbar programming pass writes.
+    This is the weight-stationary precompute — ``bit_exact_mvm`` consumes it
+    via ``u_planes`` so per-call work is activations-only (one batched
+    einsum over the stacked slices, no per-plane matmul loop)."""
+    u, _ = offset_encode(w_int, cfg.k_w)
+    u_b = bitplanes(u, cfg.k_w, axis=u.ndim - 2)       # (..., k_w, K, N)
+    u_g = _group(u_b, cfg.xbar, axis=u_b.ndim - 2)     # (..., k_w, G, X, N)
+    return u_g.astype(jnp.int8)
+
+
+def bit_exact_mvm(a_uint: jax.Array, w_int: Optional[jax.Array],
                   trq: Optional[TRQParams], cfg: PimConfig = PimConfig(),
-                  with_ops: bool = False):
+                  with_ops: bool = False, u_planes: Optional[jax.Array] = None):
     """Full sliced-datapath MVM with per-conversion (TRQ-)ADC quantization.
 
     a_uint: (M, K) unsigned ints in [0, 2**k_i);  w_int: (K, N) signed ints
     in [-2**(k_w-1), 2**(k_w-1)).  ``trq=None`` -> lossless (native R_ADC
     covers [0, xbar]).  Returns float32 (M, N) integer-valued result, plus
     total A/D operations when ``with_ops``.
+
+    ``u_planes`` short-circuits the weight-side slicing with the grouped
+    cell planes from :func:`weight_planes` (the crossbar-programming cache):
+    ``w_int`` may then be None — only the activation planes are built per
+    call and the partial sums come from one batched einsum over the stacked
+    slices.  Bitwise identical to the dynamic path.
     """
-    u, zp = offset_encode(w_int, cfg.k_w)
-    p = _bl_partial_sums(a_uint, u, cfg)
+    if u_planes is not None:
+        a_b = bitplanes(a_uint, cfg.k_i)               # (k_i, M, K)
+        a_g = _group(a_b, cfg.xbar, axis=2)            # (k_i, M, G, X)
+        p = jnp.einsum("imgx,jgxn->ijgmn",
+                       a_g.astype(jnp.float32),
+                       u_planes.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    else:
+        u, _ = offset_encode(w_int, cfg.k_w)
+        p = _bl_partial_sums(a_uint, u, cfg)
     if trq is None:
         y_q, ops = p, jnp.full(p.shape, cfg.r_adc, jnp.int32)
     else:
         y_q, ops = trq_quant(p, trq), trq_ad_ops(p, trq)
     acc = _shift_add(y_q, cfg)
+    zp = 2 ** (cfg.k_w - 1)
     corr = zp * jnp.sum(a_uint.astype(jnp.float32), axis=1, keepdims=True)
     out = acc - corr
     if with_ops:
@@ -124,29 +153,72 @@ def collect_bl_samples(a_uint: jax.Array, w_int: jax.Array,
     return _bl_partial_sums(a_uint, u, cfg)
 
 
+def group_activations(a: jax.Array, cfg: PimConfig = PimConfig()) -> jax.Array:
+    """(..., K) activations -> (..., G, X) per-crossbar row groups."""
+    return _group(a, cfg.xbar, axis=a.ndim - 1)
+
+
+def group_weights(w: jax.Array, cfg: PimConfig = PimConfig()) -> jax.Array:
+    """(..., K, N) weights -> (..., G, X, N) per-crossbar row groups — the
+    weight-stationary half of the fake-quant datapath, precomputable once
+    per layer (see ``repro.pim.plan``)."""
+    return _group(w, cfg.xbar, axis=w.ndim - 2)
+
+
+def _group_psums(a_g: jax.Array, w_g: jax.Array) -> jax.Array:
+    """All per-group partial sums at once: (..., G, X) x (G, X, N) ->
+    (..., G, N) f32 — each [..., g, :] is what crossbar ``g``'s ADCs see."""
+    return jnp.einsum("...gx,gxn->...gn", a_g, w_g,
+                      preferred_element_type=jnp.float32)
+
+
+def auto_range_fit_grouped(a_g: jax.Array, w_g: jax.Array, trq: TRQParams,
+                           grid) -> TRQParams:
+    """:func:`auto_range_fit` on pre-grouped operands (plan fast path)."""
+    vmax = jnp.max(jnp.abs(_group_psums(a_g, w_g)))
+    span = vmax / jnp.asarray(grid, jnp.float32)
+    reach = 2.0 ** (trq.n_r2 + trq.m)
+    scale = jnp.maximum(span / reach, 1e-6)
+    return trq.replace(delta_r1=trq.delta_r1 * scale)
+
+
 def auto_range_fit(a: jax.Array, w: jax.Array, trq: TRQParams, grid,
                    cfg: PimConfig = PimConfig()) -> TRQParams:
     """Uncalibrated layers: scale ``delta_r1`` so the coarse range
     2^(n_r2+m)*delta_r1 covers the observed per-group |psum| max (the fused
     kernel keeps a running max in VMEM and requantizes; the sim takes one
     extra reduction pass).  Calibrated layers (Algorithm 1) have exact
-    registers and skip this.  Shared by the jnp scan path and the Pallas
-    backend so both quantize on the identical grid."""
-    a_g = _group(a, cfg.xbar, axis=a.ndim - 1)          # (..., G, X)
-    w_g = _group(w, cfg.xbar, axis=0)                   # (G, X, N)
-    a_g = jnp.moveaxis(a_g, -2, 0)                      # (G, ..., X)
+    registers and skip this.  Shared by the jnp path and the Pallas backend
+    so both quantize on the identical grid (max is order-independent, so
+    the batched reduction here matches the old per-group running max
+    bit-for-bit)."""
+    return auto_range_fit_grouped(group_activations(a, cfg),
+                                  group_weights(w, cfg), trq, grid)
 
-    def mx(c, gw):
-        ag, wg = gw
-        p = jnp.einsum("...x,xn->...n", ag, wg,
-                       preferred_element_type=jnp.float32)
-        return jnp.maximum(c, jnp.max(jnp.abs(p))), None
 
-    vmax, _ = jax.lax.scan(mx, jnp.float32(0.0), (a_g, w_g))
-    span = vmax / jnp.asarray(grid, jnp.float32)
-    reach = 2.0 ** (trq.n_r2 + trq.m)
-    scale = jnp.maximum(span / reach, 1e-6)
-    return trq.replace(delta_r1=trq.delta_r1 * scale)
+def fake_quant_mvm_grouped(a_g: jax.Array, w_g: jax.Array, trq: TRQParams,
+                           grid, out_dtype, ste: bool = False,
+                           auto_range: bool = False, with_ops: bool = False):
+    """Grouped-operand core of :func:`fake_quant_mvm` — weight side comes
+    pre-grouped (per-call from ``group_weights`` or once per layer from the
+    plan cache).  Quantize/accumulate runs in f32 with ONE cast to
+    ``out_dtype`` at the end — exactly the Pallas kernel's accumulator
+    discipline, so the two datapaths stay bit-aligned in bf16 too."""
+    grid = jnp.asarray(grid, jnp.float32)
+    if auto_range:
+        trq = auto_range_fit_grouped(a_g, w_g, trq, grid)
+    p = _group_psums(a_g, w_g)                          # (..., G, N) f32
+    scaled = p / grid
+    q = trq_quant(scaled, trq) * grid                   # f32, all groups
+    if ste:
+        # straight-through: forward is exactly q, gradient flows through p
+        q = p + jax.lax.stop_gradient(q - p)
+    acc = jnp.sum(q, axis=-2).astype(out_dtype)         # (..., N)
+    if with_ops:
+        ops = jnp.sum(jax.lax.stop_gradient(
+            trq_ad_ops(scaled, trq)).astype(jnp.float32))
+        return acc, ops
+    return acc
 
 
 def fake_quant_mvm(a: jax.Array, w: jax.Array, trq: TRQParams,
@@ -161,10 +233,17 @@ def fake_quant_mvm(a: jax.Array, w: jax.Array, trq: TRQParams,
     This is the LM-scale integration path; it preserves the error *locality*
     (per-BL-group) while being a single matmul per group.
 
-    Implementation: ``lax.scan`` over row groups so the live partial-sum
-    tensor is one (..., N) tile — never the unfused (..., G, N) blow-up
-    (that fusion is what the trq_group_mvm Pallas kernel does in VMEM on
-    real TPU hardware).
+    Implementation: one batched (..., G, N) einsum with the quantizer
+    applied to every group tile at once, then a sum over the group axis.
+    The former per-group ``lax.scan`` kept live memory at one (..., N)
+    tile but paid a Python-dispatched scan step per group — a 30x
+    wall-clock cliff on the CPU/QAT path.  The trade is explicit: the
+    (..., G, N) psum tensor now materializes, i.e. G x the output tile of
+    extra live bytes — fine for the behavioral oracle and smoke-scale QAT,
+    but a large-K/large-batch QAT step that used to fit under the scan's
+    bounded-memory invariant may need a smaller microbatch (or remat)
+    after this change.  Deployment is unaffected: the trq_group_mvm
+    Pallas kernel keeps the fusion in VMEM on real hardware.
 
     a: (..., K) float;  w: (K, N) float;  scales map partial sums onto the
     ADC integer grid.  ``ste=True`` makes it differentiable (QAT-style).
@@ -172,32 +251,9 @@ def fake_quant_mvm(a: jax.Array, w: jax.Array, trq: TRQParams,
     comparator cycles, f32 scalar, Eq. 6) spent on the G conversions behind
     every output element.
     """
-    grid = jnp.asarray(a_scale * w_scale, a.dtype)
-    if auto_range:
-        trq = auto_range_fit(a, w, trq, grid, cfg)
-
-    a_g = _group(a, cfg.xbar, axis=a.ndim - 1)          # (..., G, X)
-    w_g = _group(w, cfg.xbar, axis=0)                   # (G, X, N)
-    a_g = jnp.moveaxis(a_g, -2, 0)                      # (G, ..., X)
-
-    def body(carry, gw):
-        acc, ops = carry
-        ag, wg = gw
-        p = jnp.einsum("...x,xn->...n", ag, wg,
-                       preferred_element_type=jnp.float32)
-        scaled = p / grid
-        q = (trq_quant(scaled, trq) * grid).astype(a.dtype)
-        p = p.astype(a.dtype)
-        if ste:
-            q = p + jax.lax.stop_gradient(q - p)
-        if with_ops:
-            ops = ops + jnp.sum(jax.lax.stop_gradient(
-                trq_ad_ops(scaled, trq)).astype(jnp.float32))
-        return (acc + q, ops), None
-
-    out_shape = a.shape[:-1] + (w.shape[1],)
-    acc0 = jnp.zeros(out_shape, a.dtype)
-    (acc, ops), _ = jax.lax.scan(body, (acc0, jnp.float32(0.0)), (a_g, w_g))
-    if with_ops:
-        return acc, ops
-    return acc
+    grid = (jnp.asarray(a_scale, jnp.float32)
+            * jnp.asarray(w_scale, jnp.float32))
+    return fake_quant_mvm_grouped(group_activations(a, cfg),
+                                  group_weights(w, cfg), trq, grid, a.dtype,
+                                  ste=ste, auto_range=auto_range,
+                                  with_ops=with_ops)

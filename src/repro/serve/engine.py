@@ -20,6 +20,12 @@ needs):
   slot is scattered back.  Gather/scatter is pure data movement, which is
   why paged decode is bitwise-identical to the dense slot engine
   (``paged=False``), kept as the reference for the equivalence suite;
+* weight-stationary plan cache: ``prepare_params`` runs once at engine
+  init (the crossbar programming pass) and the resulting ``PimPlan`` is
+  passed into every jit'd prefill/decode step, so per-token work is
+  activations-only — no max-|w| rescan, re-cast, or re-slicing per layer
+  per token.  Bitwise identical to the dynamic path; ``plan=False``
+  restores it for A/B runs;
 * per-request A/D-energy metering: every prefill/decode jit call returns
   the summed ``PimOut.ad_ops`` of its ``pim_mvm`` calls (threaded through
   the layer scans by ``repro.pim.backend.traced_ad_ops``); the engine
@@ -44,6 +50,8 @@ from repro.core.energy import adc_energy_pj
 from repro.core.quant_state import QuantState, use_quant_state
 from repro.dist.sharding import _ACTIVE as _MESH_ACTIVE
 from repro.pim.backend import traced_ad_ops
+from repro.pim.plan import (PimPlan, check_plan, has_prepared,
+                            prepare_params, quant_state_token)
 from .kvcache import PagedKVCache, ZERO_PAGE, pool_pspecs
 
 
@@ -128,6 +136,7 @@ class ServeEngine:
                  max_batch: int = 8, max_len: int = 512,
                  extra_inputs: Optional[Callable[[int, int], dict]] = None,
                  quant_state: Optional[QuantState] = None,
+                 plan=True,
                  paged: bool = True, block_size: int = 16,
                  prefix_reuse: bool = True,
                  num_blocks: Optional[int] = None,
@@ -141,6 +150,37 @@ class ServeEngine:
         # every prefill/decode trace so each pim_linear resolves its own
         # calibrated TRQParams instead of the global cfg.trq default
         self.quant_state = quant_state
+        # crossbar programming cache: prepare ONCE at engine init (the
+        # weight-stationary premise — weights are programmed into the
+        # arrays once), then pass the plan into every jit'd prefill/decode
+        # step so no weight-side state is re-derived per token.  Bitwise
+        # identical to the dynamic path (tests/test_plan.py).
+        # plan=True -> build here; a prebuilt PimPlan is validated against
+        # these params (stale-plan guard); plan=False/None -> dynamic.
+        # plan=True is best-effort: a custom backend registered without a
+        # prepared path (the register_backend extension point) serves
+        # dynamically instead of failing engine construction.
+        if plan is True:
+            self.plan = prepare_params(params, cfg,
+                                       quant_state=quant_state) \
+                if has_prepared(cfg.pim_backend) else None
+        elif isinstance(plan, PimPlan):
+            if plan.backend != cfg.pim_backend:
+                raise ValueError(
+                    f"plan was programmed for backend {plan.backend!r} but "
+                    f"the engine serves {cfg.pim_backend!r} — every "
+                    f"pim_linear would silently fall back to the dynamic "
+                    f"path; re-run prepare_params for this backend")
+            if plan.qs_token != quant_state_token(quant_state):
+                raise ValueError(
+                    "plan was programmed against a different QuantState "
+                    "than this engine serves — prepared registers would "
+                    "silently diverge from the dynamic datapath; re-run "
+                    "prepare_params(params, cfg, quant_state=...) with the "
+                    "engine's register file")
+            self.plan = check_plan(plan, params)
+        else:
+            self.plan = None
         # extra_inputs(batch, seq) -> dict of extra batch entries (modality
         # stubs: 'embeds' for vlm/audio frontends)
         self.extra_inputs = extra_inputs or (lambda b, s: {})
@@ -190,17 +230,17 @@ class ServeEngine:
 
     # -- jit'd step functions --------------------------------------------------
 
-    def _prefill_step(self, params, tokens, extra, plen: int):
+    def _prefill_step(self, params, plan, tokens, extra, plen: int):
         """tokens: (1, plen_padded); returns (last_logits, batch=1 cache,
         summed A/D ops of every pim_mvm in the trace)."""
         with use_quant_state(self.quant_state), traced_ad_ops() as tally:
             cache = self._prefill_cache_fn(1, self.max_len)
             batch = {"tokens": tokens, **extra}
             logits, cache, _ = self.apply_fn(params, batch, cache=cache,
-                                             mode="prefill")
+                                             mode="prefill", plan=plan)
             return logits[:, -1], cache, tally.value
 
-    def _prefill_cont_step(self, params, tokens, positions, cache):
+    def _prefill_cont_step(self, params, plan, tokens, positions, cache):
         """Continued prefill: append the suffix tokens to a warm cache that
         already holds ``positions[0]`` prefix tokens (prefix-reuse path).
         The cache buffer is trimmed to prefix+suffix so the attention
@@ -208,15 +248,15 @@ class ServeEngine:
         with use_quant_state(self.quant_state), traced_ad_ops() as tally:
             batch = {"tokens": tokens, "positions": positions}
             logits, cache, _ = self.apply_fn(params, batch, cache=cache,
-                                             mode="prefill_cont")
+                                             mode="prefill_cont", plan=plan)
             return logits[:, -1], cache, tally.value
 
-    def _decode_step(self, params, cache, tokens, extra):
+    def _decode_step(self, params, plan, cache, tokens, extra):
         """tokens: (max_batch, 1); one token for every slot."""
         with use_quant_state(self.quant_state), traced_ad_ops() as tally:
             batch = {"tokens": tokens, **extra}
             logits, cache, _ = self.apply_fn(params, batch, cache=cache,
-                                             mode="decode")
+                                             mode="decode", plan=plan)
             return logits[:, -1], cache, tally.value
 
     def _sample(self, logits: jax.Array, temps: np.ndarray) -> np.ndarray:
@@ -317,12 +357,13 @@ class ServeEngine:
             dense1 = self.kv.assemble(state1, table1)
             positions = np.arange(L, padded, dtype=np.int32)[None]
             last_logits, small, ops = self._prefill_cont_jit(
-                self.params, jnp.asarray(toks[:, L:]),
+                self.params, self.plan, jnp.asarray(toks[:, L:]),
                 jnp.asarray(positions), dense1)
             r.reused_tokens = L
         else:
             last_logits, small, ops = self._prefill_jit(
-                self.params, jnp.asarray(toks), extra, plen=padded)
+                self.params, self.plan, jnp.asarray(toks), extra,
+                plen=padded)
         self._meter(r, ops, prefill=True)
 
         if self.paged and self.kv.specs:
@@ -423,7 +464,7 @@ class ServeEngine:
         extra = self.extra_inputs(self.max_batch, 1)
         cache = self._decode_cache()
         logits, new_cache, ops = self._decode_jit(
-            self.params, cache, jnp.asarray(toks), extra)
+            self.params, self.plan, cache, jnp.asarray(toks), extra)
         self._writeback(new_cache, active)
         # batched MVMs convert all resident rows together; attribute the
         # step's conversions evenly across the slots that stepped (total is

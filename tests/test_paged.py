@@ -41,8 +41,8 @@ def _capture_active_logits(eng):
     rows = []
     orig = eng._decode_jit
 
-    def wrapped(params, cache, toks, extra):
-        out = orig(params, cache, toks, extra)
+    def wrapped(params, plan, cache, toks, extra):
+        out = orig(params, plan, cache, toks, extra)
         act = [i for i, r in enumerate(eng.slots) if r is not None]
         rows.append(np.asarray(out[0])[act])
         return out

@@ -1,0 +1,376 @@
+"""Weight-stationary PIM plan cache (repro.pim.plan): prepared-vs-dynamic
+bitwise parity for every backend at the MVM level and across llama / rwkv /
+enc-dec serve steps, plan rebuild round-trips alongside the QuantState JSON,
+and the stale-plan guard."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_state import (load_quant_state,
+                                    quant_state_from_calibration,
+                                    save_quant_state)
+from repro.core.trq import make_params
+from repro.models.registry import build_model, get_config
+from repro.pim import (LayerPlan, PimPlan, check_plan, pim_mvm,
+                       prepare_linear, prepare_params, traced_ad_ops)
+
+BACKENDS = ("exact", "fake_quant", "pallas", "bit_exact")
+
+
+def _tiny(arch: str, backend: str, **over):
+    """Small same-family config: every backend (incl. the O(k_i*k_w)
+    bit-exact audit path) runs the full serve step in seconds."""
+    cfg = get_config(arch, smoke=True)
+    kw = dict(remat="none", pim_backend=backend, n_layers=2, d_model=64,
+              n_heads=2, n_kv_heads=2, d_ff=96, vocab_size=64)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = 2
+    kw.update(over)
+    return cfg.replace(**kw)
+
+
+def _xw(rng, m=8, k=320, n=24, dtype=jnp.float32):
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), dtype)
+    w = jnp.asarray(rng.normal(0, 1, (k, n)), dtype)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# MVM-level parity (acceptance criterion: same y AND same ad_ops, bitwise)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_pim_mvm_prepared_bitwise(rng, backend, dtype):
+    p = make_params(delta_r1=1.0, n_r1=4, n_r2=4, m=3, signed=True)
+    trq = p if backend in ("fake_quant", "pallas") else None
+    x, w = _xw(rng, dtype=dtype)
+    dyn = pim_mvm(x, w, trq, backend=backend)
+    lp = prepare_linear(w, trq, backend=backend)
+    prep = pim_mvm(x, plan=lp)
+    np.testing.assert_array_equal(np.asarray(dyn.y), np.asarray(prep.y))
+    assert float(dyn.ad_ops) == float(prep.ad_ops)
+
+
+@pytest.mark.parametrize("backend", ["fake_quant", "pallas"])
+def test_pim_mvm_prepared_bitwise_auto_range(rng, backend):
+    p = make_params(delta_r1=1.0, n_r1=4, n_r2=4, m=3, signed=True)
+    x, w = _xw(rng, m=3, k=200, n=40)        # unaligned decode shape
+    dyn = pim_mvm(x, w, p, backend=backend, auto_range=True)
+    lp = prepare_linear(w, p, backend=backend, auto_range=True)
+    prep = pim_mvm(x, plan=lp)
+    np.testing.assert_array_equal(np.asarray(dyn.y), np.asarray(prep.y))
+    assert float(dyn.ad_ops) == float(prep.ad_ops)
+
+
+def test_pim_mvm_plan_knob_precedence(rng):
+    """w/trq alongside plan= raise; backend= must match the programmed
+    payload (documented knob precedence)."""
+    p = make_params(delta_r1=1.0, signed=True)
+    x, w = _xw(rng)
+    lp = prepare_linear(w, p, backend="fake_quant")
+    with pytest.raises(ValueError, match="plan"):
+        pim_mvm(x, w, plan=lp)
+    with pytest.raises(ValueError, match="pallas"):
+        pim_mvm(x, plan=lp, backend="pallas")
+    out = pim_mvm(x, plan=lp, backend="fake_quant")   # matching is fine
+    assert out.y.shape == (8, 24)
+
+
+# ---------------------------------------------------------------------------
+# serve-step parity across model families (llama / rwkv / enc-dec)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "rwkv6-7b",
+                                  "whisper-medium"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_serve_step_prepared_bitwise(rng, arch, backend):
+    """prefill + decode through apply_fn: identical logits and identical
+    traced A/D-op totals with and without the plan threaded."""
+    cfg = _tiny(arch, backend)
+    init_fn, apply_fn, cache_fn = build_model(cfg)
+    params = init_fn(jax.random.PRNGKey(0))
+    plan = prepare_params(params, cfg)
+    assert len(plan) > 0 and plan.backend == backend
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 6)),
+                                   jnp.int32)}
+    if cfg.encoder_layers:
+        batch["embeds"] = jnp.zeros((1, 6, cfg.d_model), jnp.float32)
+    cache = cache_fn(1, 8)
+
+    def run(pl):
+        with traced_ad_ops() as t:
+            l1, c, _ = apply_fn(params, batch, cache=cache, mode="prefill",
+                                plan=pl)
+            l2, _, _ = apply_fn(params, {"tokens": jnp.asarray([[3]],
+                                                               jnp.int32)},
+                                cache=c, mode="decode", plan=pl)
+            return l1, l2, float(t.value)
+
+    l1a, l2a, ops_a = run(None)
+    l1b, l2b, ops_b = run(plan)
+    np.testing.assert_array_equal(np.asarray(l1a), np.asarray(l1b))
+    np.testing.assert_array_equal(np.asarray(l2a), np.asarray(l2b))
+    assert ops_a == ops_b
+    if backend != "exact":
+        assert ops_a > 0.0
+
+
+def test_lm_frontend_prepared_bitwise_nonzero_embeds(rng):
+    """The VLM/audio frontend is the one pim_linear that runs at the
+    embed/param dtype (before apply_lm's compute-dtype cast); the plan must
+    freeze its weights at that dtype — regression for real (non-zero)
+    patch embeddings with f32 params + bf16 compute."""
+    cfg = _tiny("internvl2-76b", "fake_quant")
+    assert cfg.frontend == "patch" and cfg.param_dtype == "float32"
+    init_fn, apply_fn, _ = build_model(cfg)
+    params = init_fn(jax.random.PRNGKey(0))
+    plan = prepare_params(params, cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 4)),
+                                   jnp.int32),
+             "embeds": jnp.asarray(rng.normal(0, 1, (1, 4, cfg.d_model)),
+                                   jnp.float32)}
+    la, _, _ = apply_fn(params, batch, mode="train")
+    lb, _, _ = apply_fn(params, batch, mode="train", plan=plan)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_unrolled_depth_names_prepared_bitwise(rng):
+    """scan_layers=False resolves one register file per absolute depth;
+    the plan stacks them along the period axis and stays bitwise."""
+    cfg = _tiny("llama3.2-3b", "fake_quant", scan_layers=False)
+    init_fn, apply_fn, _ = build_model(cfg)
+    params = init_fn(jax.random.PRNGKey(1))
+    plan = prepare_params(params, cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 4)),
+                                   jnp.int32)}
+    la, _, _ = apply_fn(params, batch, mode="train")
+    lb, _, _ = apply_fn(params, batch, mode="train", plan=plan)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_engine_plan_default_bitwise(rng):
+    """ServeEngine(plan=True) — the default — generates the same tokens and
+    meters the same per-request A/D ops as the dynamic engine."""
+    from repro.serve.engine import ServeEngine
+    cfg = _tiny("llama3.2-3b", "fake_quant").replace(param_dtype="bfloat16")
+    init_fn, apply_fn, cache_fn = build_model(cfg)
+    params = init_fn(jax.random.PRNGKey(0))
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (9, 17, 5)]
+
+    def serve(plan):
+        eng = ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=2,
+                          max_len=32, plan=plan)
+        for pr in prompts:
+            eng.submit(pr, max_new_tokens=4)
+        done = eng.run()
+        return {r.uid: (r.generated, r.ad_ops) for r in done}, \
+            eng.total_ad_ops
+
+    dyn, dyn_total = serve(False)
+    prep, prep_total = serve(True)
+    assert dyn_total == prep_total > 0
+    for uid in dyn:
+        assert dyn[uid][0] == prep[uid][0]
+        assert dyn[uid][1] == prep[uid][1]
+
+
+# ---------------------------------------------------------------------------
+# plan round-trip alongside the QuantState JSON
+# ---------------------------------------------------------------------------
+
+def test_plan_rebuild_roundtrips_with_quant_state_json(tmp_path):
+    """Saving the QuantState next to a checkpoint and rebuilding the plan
+    from the reloaded state reproduces the programming cache exactly —
+    the plan is a pure function of (params, quant_state, cfg)."""
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(jax.random.PRNGKey(0))
+    qs = quant_state_from_calibration(
+        {"layer_0/attn/wq": make_params(delta_r1=0.37, bias=1.0, n_r1=5,
+                                        n_r2=5, m=2, signed=True),
+         "layer_0/mlp/w_up": make_params(delta_r1=1.2, signed=True)},
+        exact_names=True)
+    plan_a = prepare_params(params, cfg, quant_state=qs)
+    path = save_quant_state(str(tmp_path), qs)
+    plan_b = prepare_params(params, cfg, quant_state=load_quant_state(path))
+
+    la, ta = jax.tree_util.tree_flatten(plan_a)
+    lb, tb = jax.tree_util.tree_flatten(plan_b)
+    assert ta == tb                       # same structure incl. static aux
+    for xa, xb in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_calibrated_rule_lands_in_plan():
+    """A QuantState rule resolves into the planned layer's registers (and
+    disables auto-ranging for it), mirroring pim_linear's priority order."""
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(jax.random.PRNGKey(0))
+    qs = quant_state_from_calibration(
+        {"layer_0/attn/wq": make_params(delta_r1=0.125, n_r1=3, n_r2=7,
+                                        m=1, signed=True)})
+    plan = prepare_params(params, cfg, quant_state=qs)
+    wq = plan.layers["periods"]["layer_0"]["attn"]["wq"]
+    assert wq.trq.n_r1 == 3 and wq.trq.n_r2 == 7
+    assert not wq.auto_range
+    assert float(wq.trq.delta_r1[0]) == 0.125
+    wk = plan.layers["periods"]["layer_0"]["attn"]["wk"]
+    assert wk.auto_range and wk.trq.n_r1 == cfg.trq.n_r1
+
+
+# ---------------------------------------------------------------------------
+# stale-plan guard
+# ---------------------------------------------------------------------------
+
+def test_stale_plan_raises_in_pim_linear(rng):
+    from repro.models.layers import pim_linear
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    w_small = jnp.asarray(rng.normal(0, 1, (64, 32)), jnp.float32)
+    w_big = jnp.asarray(rng.normal(0, 1, (96, 32)), jnp.float32)
+    lp = prepare_linear(w_small, make_params(signed=True),
+                        backend="fake_quant")
+    x = jnp.asarray(rng.normal(0, 1, (2, 96)), jnp.float32)
+    with pytest.raises(ValueError, match="stale plan"):
+        pim_linear({"w": w_big}, x, cfg, name="layer_0/attn/wq", plan=lp)
+
+
+def test_check_plan_rejects_mismatched_params():
+    cfg_a = _tiny("llama3.2-3b", "fake_quant")
+    cfg_b = _tiny("llama3.2-3b", "fake_quant", d_ff=128)
+    init_a, _, _ = build_model(cfg_a)
+    init_b, _, _ = build_model(cfg_b)
+    params_a = init_a(jax.random.PRNGKey(0))
+    params_b = init_b(jax.random.PRNGKey(0))
+    plan = prepare_params(params_a, cfg_a)
+    assert check_plan(plan, params_a) is plan
+    with pytest.raises(ValueError, match="stale plan"):
+        check_plan(plan, params_b)
+
+
+def test_engine_validates_prebuilt_plan():
+    from repro.serve.engine import ServeEngine
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    other = _tiny("llama3.2-3b", "fake_quant", d_model=96, d_ff=128)
+    init_fn, apply_fn, cache_fn = build_model(cfg)
+    init_o, _, _ = build_model(other)
+    params = init_fn(jax.random.PRNGKey(0))
+    stale = prepare_params(init_o(jax.random.PRNGKey(0)), other)
+    with pytest.raises(ValueError, match="stale plan"):
+        ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=1,
+                    max_len=16, plan=stale)
+    # a plan for another backend would silently serve 100% dynamic: reject
+    wrong = prepare_params(params, cfg, backend="pallas")
+    with pytest.raises(ValueError, match="pallas"):
+        ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=1,
+                    max_len=16, plan=wrong)
+    # a plan programmed against different calibration than the engine
+    # serves would silently break the bitwise A/B contract: reject
+    qs = quant_state_from_calibration(
+        {"layer_0/attn/wq": make_params(delta_r1=0.5, signed=True)})
+    no_qs_plan = prepare_params(params, cfg)
+    with pytest.raises(ValueError, match="QuantState"):
+        ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=1,
+                    max_len=16, plan=no_qs_plan, quant_state=qs)
+    ok = prepare_params(params, cfg, quant_state=qs)
+    eng = ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=1,
+                      max_len=16, plan=ok, quant_state=qs)
+    assert eng.plan is ok
+
+
+def test_bit_exact_plan_rejects_w_scale_override(rng):
+    """The programmed cell planes are a function of the weight scale — a
+    per-call w_scale override would silently mis-scale, so it raises."""
+    x, w = _xw(rng, m=2, k=96, n=8)
+    lp = prepare_linear(w, None, backend="bit_exact")
+    with pytest.raises(ValueError, match="w_scale"):
+        pim_mvm(x, plan=lp, w_scale=0.1)
+    out = pim_mvm(x, plan=lp, a_scale=1.0)     # a-side override is fine
+    assert out.y.shape == (2, 8)
+
+
+def test_use_backend_override_falls_back_to_dynamic(rng):
+    """A plan programmed for one backend is ignored (not an error) when a
+    use_backend context selects another — A/B sweeps keep working."""
+    from repro.models.layers import pim_linear
+    from repro.pim import use_backend
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    x, w = _xw(rng, m=2, k=64, n=16)
+    lp = prepare_linear(w, make_params(signed=True), backend="fake_quant")
+    y_exact = pim_linear({"w": w}, x, cfg.replace(pim_backend="exact"),
+                         name="n")
+    with use_backend("exact"):
+        y = pim_linear({"w": w}, x, cfg, name="n", plan=lp)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_exact))
+
+
+# ---------------------------------------------------------------------------
+# decode-shaped kernel path + tally type stability
+# ---------------------------------------------------------------------------
+
+def test_auto_block_m_matches_padded_bitwise(rng):
+    from repro.kernels import trq_group_mvm_pallas
+    from repro.kernels.trq_group_mvm.ops import pick_block_m
+    assert [pick_block_m(m) for m in (1, 8, 9, 16, 33, 64, 65, 200)] == \
+        [8, 8, 16, 16, 64, 64, 128, 128]
+    p = make_params(delta_r1=1.0, n_r1=4, n_r2=4, m=3, signed=True)
+    x, w = _xw(rng, m=3, k=320, n=24)
+    y_auto, ops_auto = trq_group_mvm_pallas(x, w, p, 0.05, 1.0,
+                                            interpret=True, with_ops=True)
+    y_128, ops_128 = trq_group_mvm_pallas(x, w, p, 0.05, 1.0, block_m=128,
+                                          interpret=True, with_ops=True)
+    np.testing.assert_array_equal(np.asarray(y_auto), np.asarray(y_128))
+    assert float(ops_auto) == float(ops_128)
+
+
+def test_serve_cell_prepare_plan_lowers():
+    """build_serve_cell(prepare_plan=True) threads an eval_shape plan
+    stand-in through the jit'd prefill AND decode steps — both must lower
+    (the dry-run contract for the prepared datapath)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import build_serve_cell
+    mesh = make_host_mesh()
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    for shape in ("prefill_32k", "decode_32k"):
+        cell = build_serve_cell("llama3.2-3b", mesh, shape, cfg=cfg,
+                                prepare_plan=True)
+        assert cell.args[1] is not None       # the plan stand-in
+        cell.lower()
+
+
+def test_engine_plan_default_tolerates_unprepared_backend(rng):
+    """plan=True (the default) is best-effort: a custom backend registered
+    via register_backend without a prepared path serves dynamically
+    instead of failing engine construction."""
+    import jax.numpy as jnp_
+    from repro.pim import PimOut, register_backend
+    from repro.pim.backend import _BACKENDS
+    from repro.serve.engine import ServeEngine
+
+    @register_backend("probe_noplan")
+    def probe(x, w, trq=None, **_):
+        return PimOut(x @ w.astype(x.dtype), jnp_.float32(0.0))
+
+    try:
+        cfg = _tiny("llama3.2-3b", "probe_noplan")
+        init_fn, apply_fn, cache_fn = build_model(cfg)
+        params = init_fn(jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=2,
+                          max_len=16)
+        assert eng.plan is None
+        eng.submit(rng.integers(0, cfg.vocab_size, 5), max_new_tokens=2)
+        assert len(eng.run()) == 1
+    finally:
+        _BACKENDS.pop("probe_noplan", None)
+
+
+def test_ad_ops_tally_empty_total_is_float():
+    from repro.pim import AdOpsTally, ad_ops_tally
+    t = AdOpsTally()
+    assert t.total() == 0.0 and isinstance(t.total(), float)
+    with ad_ops_tally() as t2:
+        pass
+    assert isinstance(t2.total(), float)

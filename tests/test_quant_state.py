@@ -196,7 +196,8 @@ def test_serve_engine_applies_quant_state(rng):
     def prefill_logits(qs):
         eng = ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=2,
                           max_len=32, quant_state=qs)
-        logits, _, _ops = eng._prefill_jit(params, toks, {}, plen=8)
+        logits, _, _ops = eng._prefill_jit(params, eng.plan, toks, {},
+                                           plen=8)
         return np.asarray(logits)
 
     base = prefill_logits(None)
