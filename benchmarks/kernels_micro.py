@@ -113,6 +113,27 @@ def run(quick: bool = False) -> dict:
         rec(f"backend.{name}.mvm_prepared", us,
             f"{note}.plan.mean_ad_ops={float(pout.ad_ops) / conv:.2f}",
             mean_ad_ops=float(pout.ad_ops) / conv)
+
+    # -- Runtime front door: rt.mvm through a compiled execution context ---
+    # the same prepared datapath as backend.fake_quant.mvm_prepared, but
+    # reached through repro.runtime (plan lookup + ambient install + report
+    # wrapping) — tracks the public-API overhead over the raw call
+    import jax as _jax
+    from repro import runtime as _runtime
+    from repro.models.registry import build_model, get_config
+    lm_cfg = get_config("llama3.2-3b", smoke=True).replace(
+        remat="none", pim_backend="fake_quant")
+    lm_params = build_model(lm_cfg)[0](_jax.random.PRNGKey(0))
+    rt = _runtime.compile(lm_cfg, lm_params)
+    xr = jnp.asarray(rng.normal(0, 1, (8, lm_cfg.d_model)).astype(np.float32))
+    us = timeit(lambda a_: rt.mvm(a_, layer="layer_0/attn/wq")[0],
+                xr, iters=2 if quick else 3)
+    rout, _rep = rt.mvm(xr, layer="layer_0/attn/wq")
+    conv = xr.shape[0] * rout.shape[-1] * -(-xr.shape[1] // 128)
+    rec("runtime.mvm.fake_quant", us,
+        f"m8.k{lm_cfg.d_model}.n{rout.shape[-1]}.plan."
+        f"mean_ad_ops={float(_rep.ad_ops) / conv:.2f}",
+        mean_ad_ops=float(_rep.ad_ops) / conv)
     return records
 
 

@@ -33,12 +33,14 @@ import numpy as np
 def _build(arch, backend="fake_quant"):
     import jax
     import jax.numpy as jnp
+    from repro import runtime
     from repro.models.registry import build_model, get_config
 
     cfg = get_config(arch, smoke=True).replace(remat="none",
                                                pim_backend=backend)
-    init_fn, apply_fn, cache_fn = build_model(cfg)
-    params = init_fn(jax.random.PRNGKey(0))
+    init_fn, _, _ = build_model(cfg)
+    # one compiled execution context per arch; the engine is a thin client
+    rt = runtime.compile(cfg, init_fn(jax.random.PRNGKey(0)))
 
     def extra_inputs(b, s):
         if (cfg.frontend in ("patch", "frames") or cfg.encoder_layers > 0) \
@@ -46,15 +48,15 @@ def _build(arch, backend="fake_quant"):
             return {"embeds": jnp.zeros((b, 8, cfg.d_model), jnp.float32)}
         return {}
 
-    return cfg, apply_fn, cache_fn, params, extra_inputs
+    return cfg, rt, extra_inputs
 
 
 def _serve(built, prompts, *, max_new, max_batch=2, max_len=128,
            reuse=True, block_size=16):
     from repro.serve.engine import ServeEngine
 
-    cfg, apply_fn, cache_fn, params, extra_inputs = built
-    eng = ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=max_batch,
+    cfg, rt, extra_inputs = built
+    eng = ServeEngine(rt, max_batch=max_batch,
                       max_len=max_len, paged=True, block_size=block_size,
                       prefix_reuse=reuse, extra_inputs=extra_inputs)
     t0 = time.perf_counter()

@@ -1,4 +1,4 @@
-"""Quickstart: the paper's technique in 80 lines.
+"""Quickstart: the paper's technique in ~100 lines.
 
 1. Build a skewed bit-line distribution (what ReRAM crossbars actually emit).
 2. Calibrate TRQ with Algorithm 1 — no retraining.
@@ -6,16 +6,21 @@
 4. Run the same thing through the Pallas TRQ kernel (interpret mode on CPU).
 5. Run one MVM on every registered PIM execution backend — the same
    ``PimOut(y, ad_ops)`` contract every model layer consumes.
+6. The 5-line front door: compile a ``repro.runtime.Runtime`` over a real
+   LM and read the A/D-energy report off every call.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.core.calibrate import calibrate_layer
 from repro.core.energy import R_ADC_DEFAULT, adc_energy_pj
 from repro.core.trq import make_params, trq_ad_ops, trq_quant
 from repro.kernels import trq_quant_pallas
+from repro.models.registry import build_model, get_config
 from repro.pim import list_backends, pim_mvm
 
 # -- 1. a Fig-3a-style BL distribution: dense near zero + sparse tail -------
@@ -68,3 +73,24 @@ for name in list_backends():
                   auto_range=True)
     err = float(jnp.linalg.norm(out.y - ref) / jnp.linalg.norm(ref))
     print(f"  {name:10s} rel_err={err:.4f}  ad_ops={float(out.ad_ops):>9.0f}")
+
+# -- 6. the front door: one compiled Runtime over a real LM -----------------
+# repro.runtime.compile resolves the execution context (backend, per-layer
+# registers, weight-stationary crossbar plan) once; every entry point
+# returns (out, AdOpsReport) — energy metering is an output, not a context
+cfg = get_config("llama3.2-3b", smoke=True).replace(pim_backend="fake_quant",
+                                                    remat="none")
+params = build_model(cfg)[0](jax.random.PRNGKey(0))
+rt = runtime.compile(cfg, params)
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 16)),
+                               jnp.int32)}
+(logits, _, _), report = rt.apply(batch)
+print(f"runtime: {rt}")
+print(f"one forward: {float(report.ad_ops):.0f} A/D ops "
+      f"({report.ad_energy_pj:.0f} pJ, Eq. 6)")
+y, lrep = rt.mvm(jnp.asarray(rng.normal(0, 1, (4, cfg.d_model)), jnp.float32),
+                 layer="layer_0/attn/wq")
+print(f"one layer ({y.shape}): {float(lrep.ad_ops):.0f} A/D ops")
+_, exact_rep = rt.with_overrides(backend="exact").apply(batch)
+print(f"A/B via rt.with_overrides(backend='exact'): "
+      f"{float(exact_rep.ad_ops):.0f} A/D ops (digital reference)")

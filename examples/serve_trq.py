@@ -5,7 +5,9 @@ PTQ, no retraining, ADC resolution unchanged.
 
 The full flow: sample per-layer partial sums -> Algorithm-1 calibration ->
 ``QuantState`` (per-layer SAR registers) -> save/load next to a checkpoint
--> serve with per-layer registers + exact A/D-operation (energy) accounting.
+-> ``repro.runtime.compile`` (one explicit execution context owning the
+registers, backend, and crossbar plan) -> serve + exact A/D-operation
+(energy) accounting from the Runtime's ``AdOpsReport``.
 
   PYTHONPATH=src python examples/serve_trq.py [--requests 8] [--pim pallas]
 """
@@ -17,11 +19,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.configs.base import TRQConfig
 from repro.core.calibrate import calibrate_layer, to_quant_state
 from repro.core.energy import R_ADC_DEFAULT, adc_energy_pj
-from repro.core.quant_state import (load_quant_state, save_quant_state,
-                                    use_quant_state)
+from repro.core.quant_state import load_quant_state, save_quant_state
 from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import build_model, get_config
@@ -77,10 +79,11 @@ def main(argv=None):
         with tempfile.TemporaryDirectory() as d:
             qs = load_quant_state(save_quant_state(d, qs))
 
-        # -- 3. serve with per-layer registers ------------------------------
-        eng = ServeEngine(cfg, apply_fn, cache_fn, params,
-                          max_batch=args.max_batch, max_len=128,
-                          quant_state=qs)
+        # -- 3. compile the Runtime and serve on it -------------------------
+        # one explicit execution context: per-layer registers + backend +
+        # the programmed weight-stationary crossbar plan, resolved once
+        rt = runtime.compile(cfg, params, quant_state=qs)
+        eng = ServeEngine(rt, max_batch=args.max_batch, max_len=128)
         for i in range(args.requests):
             eng.submit(rng.integers(0, cfg.vocab_size, 8 + 4 * (i % 3)),
                        max_new_tokens=args.max_new)
@@ -91,19 +94,23 @@ def main(argv=None):
               f"tokens | {st['tokens_per_s']:.1f} tok/s | ttft "
               f"{st['mean_ttft_s'] * 1e3:.0f} ms")
 
-        # -- 4. exact energy accounting from the backends -------------------
-        with use_quant_state(qs), ad_ops_tally() as tally:
-            apply_u(params, toks, mode="train")
-        # conversion count: a uniform R_ADC-bit register file spends exactly
-        # R_ADC ops per conversion, so its tally / R_ADC counts conversions
+        # -- 4. exact energy accounting from the Runtime --------------------
+        # every entry point returns (out, AdOpsReport); a with_overrides
+        # sweep re-prepares only what changed (here: the register file)
         from repro.core.quant_state import QuantState
         from repro.core.trq import make_params
+        # unrolled model + per-depth calibrated registers: serve dynamically
+        # (a scanned plan would need geometry-aligned rules per period)
+        rt_u = runtime.compile(cfg_u, params, quant_state=qs, plan=None)
+        _, rep = rt_u.apply(toks, mode="train")
+        # conversion count: a uniform R_ADC-bit register file spends exactly
+        # R_ADC ops per conversion, so its tally / R_ADC counts conversions
         uni_qs = QuantState(default=make_params(
             delta_r1=1.0, n_r1=R_ADC_DEFAULT, n_r2=R_ADC_DEFAULT, m=0,
             mode="uniform", signed=True))
-        with use_quant_state(uni_qs), ad_ops_tally() as t_uni:
-            apply_u(params, toks, mode="train")
-    total, total_uni = tally.total(), t_uni.total()
+        _, rep_uni = rt_u.with_overrides(quant_state=uni_qs).apply(
+            toks, mode="train")
+    total, total_uni = float(rep.ad_ops), float(rep_uni.ad_ops)
     print(f"A/D ops for one forward: {total:.0f} "
           f"({adc_energy_pj(total):.0f} pJ) vs uniform "
           f"{R_ADC_DEFAULT}b {total_uni:.0f} "

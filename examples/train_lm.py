@@ -12,12 +12,13 @@ import tempfile
 
 import jax
 
+from repro import runtime
 from repro.configs.base import TrainConfig
 from repro.data.synthetic import TokenStream
 from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import build_model, get_config
-from repro.train.loop import Trainer, make_train_step, shardings_for
+from repro.train.loop import Trainer
 
 
 def main(argv=None):
@@ -51,13 +52,15 @@ def main(argv=None):
     stream = TokenStream(cfg.vocab_size, args.seq, args.batch, seed=0)
 
     with use_mesh(mesh):
-        train_step, opt_init = make_train_step(apply_fn, cfg, tc)
         params = init_fn(jax.random.PRNGKey(0))
-        opt = opt_init(params)
-        p_sh, o_sh = shardings_for(mesh, params, opt, tc)
-        jitted = jax.jit(train_step, in_shardings=(p_sh, o_sh, None, None),
-                         out_shardings=(p_sh, o_sh, None),
-                         donate_argnums=(0, 1))
+        # the compiled Runtime is the execution context: sharded/placed
+        # params, jit'd train step (with per-step A/D-op metering), ZeRO-1
+        # optimizer shardings — all resolved in one place
+        rt = runtime.compile(cfg, params, mesh=mesh, tc=tc, donate=True,
+                             plan=None)
+        jitted, opt_init, p_sh, o_sh = rt.train_setup()
+        params = rt.params
+        opt = jax.device_put(opt_init(params), o_sh)
         trainer = Trainer(train_step=jitted, batch_at=stream.batch_at, tc=tc,
                           ckpt_dir=ckpt_dir, log_every=10)
         params, opt, report = trainer.run(

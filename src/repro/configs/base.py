@@ -9,7 +9,6 @@ ShapeDtypeStructs in the dry-run.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
 
@@ -144,17 +143,15 @@ class ModelConfig:
             ffn = "mlp"
         return mixer, ffn
 
-    @property
-    def pim_mode(self) -> str:
-        """Deprecated alias for ``pim_backend`` (pre-backend-registry name)."""
-        return self.pim_backend
-
     def replace(self, **kw) -> "ModelConfig":
         if "pim_mode" in kw:
-            warnings.warn("ModelConfig.pim_mode is deprecated; use "
-                          "pim_backend (repro.pim.backend registry name)",
-                          DeprecationWarning, stacklevel=2)
-            kw["pim_backend"] = kw.pop("pim_mode")
+            # the pre-backend-registry name, removed after one deprecation
+            # cycle (PR 2 shim): a clear error beats dataclasses.replace's
+            # generic "unexpected keyword"
+            raise TypeError(
+                "ModelConfig.pim_mode was removed; use "
+                "pim_backend=<repro.pim.backend registry name>, e.g. "
+                "cfg.replace(pim_backend='fake_quant')")
         return dataclasses.replace(self, **kw)
 
 

@@ -20,7 +20,8 @@ from .energy import (E_OP_PJ, R_ADC_DEFAULT, XBAR, conversions_per_mvm,
 from .distribution import classify, histogram_summary, DistributionInfo
 from .calibrate import (calibrate_layer, calibrate_model, summarize,
                         to_quant_state, LayerCalibration)
-from .quant_state import (QuantState, use_quant_state, active_quant_state,
+from .quant_state import (QUANT_STATE_VERSION, QuantState, use_quant_state,
+                          active_quant_state,
                           quant_state_from_calibration, quant_state_to_dict,
                           quant_state_from_dict, save_quant_state,
                           load_quant_state)
@@ -46,7 +47,8 @@ __all__ = [
     "calibrate_layer", "calibrate_model", "summarize", "to_quant_state",
     "LayerCalibration",
     # per-layer register state
-    "QuantState", "use_quant_state", "active_quant_state",
+    "QUANT_STATE_VERSION", "QuantState", "use_quant_state",
+    "active_quant_state",
     "quant_state_from_calibration", "quant_state_to_dict",
     "quant_state_from_dict", "save_quant_state", "load_quant_state",
 ]

@@ -32,6 +32,12 @@ from .trq import TRQParams, make_params
 
 QUANT_STATE_FILE = "quant_state.json"
 
+# JSON schema version stamped into every saved state.  Runtime snapshots
+# saved next to checkpoints carry it so a state written by a NEWER schema
+# fails loudly at load time instead of silently misparsing; bump it when a
+# field changes meaning (and add a migration in quant_state_from_dict).
+QUANT_STATE_VERSION = 1
+
 _STATIC_FIELDS = ("n_r1", "n_r2", "m", "nu", "mode", "signed")
 
 
@@ -140,13 +146,24 @@ def _params_from_dict(d: dict) -> TRQParams:
 
 
 def quant_state_to_dict(qs: QuantState) -> dict:
-    return {"rules": [{"pattern": pat, "params": _params_to_dict(p)}
+    return {"version": QUANT_STATE_VERSION,
+            "rules": [{"pattern": pat, "params": _params_to_dict(p)}
                       for pat, p in qs.rules],
             "default": (_params_to_dict(qs.default)
                         if qs.default is not None else None)}
 
 
 def quant_state_from_dict(d: dict) -> QuantState:
+    # forward-compat check: files written before versioning are schema 1;
+    # anything newer than this build understands must fail loudly (the
+    # registers literally program the ADC — a misparse is silent corruption)
+    version = d.get("version", 1)
+    if version != QUANT_STATE_VERSION:
+        raise ValueError(
+            f"quant_state schema version {version} is not supported by this "
+            f"build (expected {QUANT_STATE_VERSION}); the snapshot was "
+            f"written by a newer repro — load it with that version or "
+            f"re-calibrate")
     rules = tuple((r["pattern"], _params_from_dict(r["params"]))
                   for r in d.get("rules", ()))
     default = d.get("default")

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import runtime
 from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import ARCHS, build_model, get_config
@@ -48,6 +49,12 @@ def main(argv=None):
     ap.add_argument("--pim", default="fake_quant",
                     choices=["exact", "fake_quant", "pallas", "bit_exact"],
                     help="PIM execution backend (repro.pim.backend registry)")
+    ap.add_argument("--backend", default=None,
+                    help="late backend override applied via "
+                         "rt.with_overrides AFTER the Runtime is compiled "
+                         "(any registered name, incl. custom backends): "
+                         "A/Bs a datapath without touching the config; the "
+                         "crossbar plan re-prepares automatically")
     ap.add_argument("--quant-state", default=None,
                     help="Algorithm-1 per-layer registers "
                          "(quant_state.json or its checkpoint dir)")
@@ -98,16 +105,25 @@ def main(argv=None):
 
     with use_mesh(mesh):
         params = init_fn(jax.random.PRNGKey(args.seed))
-        engine = ServeEngine(cfg, apply_fn, cache_fn, params,
+        # one explicit execution context: mesh/backend/registers/plan are
+        # resolved + programmed here, then the engine is a thin client.
+        # With a --backend override, plan programming is deferred to the
+        # with_overrides arm so the crossbars are programmed exactly once.
+        rt = runtime.compile(cfg, params, quant_state=qs,
+                             plan=args.plan if not args.backend else None,
+                             fns=(init_fn, apply_fn, cache_fn))
+        if args.backend:
+            rt = rt.with_overrides(backend=args.backend, plan=args.plan)
+            print(f"backend override: serving on {rt.backend!r}")
+        engine = ServeEngine(rt,
                              max_batch=args.max_batch, max_len=args.max_len,
-                             extra_inputs=extra_inputs, quant_state=qs,
-                             plan=args.plan,
+                             extra_inputs=extra_inputs,
                              paged=args.paged, block_size=args.block_size,
                              prefix_reuse=args.prefix_reuse,
                              num_blocks=args.num_blocks)
         if engine.plan is not None:
             print(f"programmed {len(engine.plan)} crossbar layer plans "
-                  f"({cfg.pim_backend})")
+                  f"({rt.backend})")
         for _ in range(args.requests):
             tail = rng.integers(0, cfg.vocab_size, args.prompt_len)
             prompt = tail if prefix is None else np.concatenate([prefix,

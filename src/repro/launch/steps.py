@@ -8,8 +8,13 @@ module builds, WITHOUT allocating anything:
   * ShapeDtypeStruct stand-ins for every argument,
   * the in/out shardings.
 
+Cells are derived from an *abstract* :class:`repro.runtime.Runtime`
+(parameters are ``jax.eval_shape`` stand-ins): the Runtime resolves the
+execution context — mesh, backend, QuantState, eval-shaped ``PimPlan`` —
+in its one audited place, and the cell step functions come from
+``Runtime.serve_cell_step`` / ``Runtime.train_cell_step``.
 ``launch/dryrun.py`` lowers+compiles these; ``launch/train.py`` /
-``launch/serve.py`` run the same builders with real arrays on the host mesh.
+``launch/serve.py`` run concrete Runtimes on the host mesh.
 """
 from __future__ import annotations
 
@@ -21,14 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import runtime as rt_mod
 from repro.configs.base import (LONG_CONTEXT_ARCHS, ModelConfig, SHAPES,
                                 ShapeConfig, TrainConfig)
-from repro.core.quant_state import QuantState, use_quant_state
+from repro.core.quant_state import QuantState
 from repro.dist.sharding import param_pspecs, use_mesh
 from repro.models.registry import build_model, get_config
-from repro.pim.plan import prepare_params
 from repro.serve.kvcache import cache_pspecs
-from repro.train.loop import make_train_step, shardings_for
+from repro.train.loop import shardings_for
 
 # patch-prefix length for the VLM frontend stub (internvl2: 1024-token tiles)
 VLM_PATCHES = 1024
@@ -148,12 +153,17 @@ def build_train_cell(arch: str, mesh: Mesh, shape_name: str = "train_4k",
     cfg = cfg or get_config(arch)
     tc = tc or make_train_config(arch)
     shape = SHAPES[shape_name]
-    init_fn, apply_fn, _ = build_model(cfg)
+    init_fn, apply_fn, cache_fn = build_model(cfg)
     moe_fsdp = arch in MOE_FFN_SHARD_DATA
 
     with use_mesh(mesh):
-        train_step, opt_init = make_train_step(apply_fn, cfg, tc)
         params_s = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        # the abstract Runtime resolves (mesh, backend, registers) once and
+        # hands back the pure train-cell step with contexts pre-installed
+        rt = rt_mod.compile(cfg, params_s, mesh=mesh,
+                            quant_state=quant_state, plan=None, tc=tc,
+                            fns=(init_fn, apply_fn, cache_fn))
+        step, opt_init = rt.train_cell_step(tc)
         opt_s = jax.eval_shape(opt_init, params_s)
         p_sh, o_sh = shardings_for(mesh, params_s, opt_s, tc,
                                    moe_ffn_shard_data=moe_fsdp)
@@ -161,10 +171,6 @@ def build_train_cell(arch: str, mesh: Mesh, shape_name: str = "train_4k",
         b_sh = batch_shardings(mesh, batch_s)
         step_s = jax.ShapeDtypeStruct((), jnp.int32)
         rep = NamedSharding(mesh, P())
-
-    def step(params, opt_state, batch, step_idx):
-        with use_mesh(mesh), use_quant_state(quant_state):
-            return train_step(params, opt_state, batch, step_idx)
 
     return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
                 args=(params_s, opt_s, batch_s, step_s),
@@ -199,6 +205,13 @@ def build_serve_cell(arch: str, mesh: Mesh, shape_name: str,
 
     with use_mesh(mesh):
         params_s = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        # abstract Runtime: resolves the context + eval-shapes the plan
+        # stand-in (the same programming-cache contract the ServeEngine's
+        # concrete Runtime uses, so dry-run compiles cover it)
+        rt = rt_mod.compile(cfg, params_s, mesh=mesh,
+                            quant_state=quant_state,
+                            plan=True if prepare_plan else None,
+                            fns=(init_fn, apply_fn, cache_fn))
         p_sh = jax.tree.map(
             lambda s: NamedSharding(mesh, s),
             param_pspecs(params_s,
@@ -207,32 +220,16 @@ def build_serve_cell(arch: str, mesh: Mesh, shape_name: str,
         c_sh = cache_pspecs(mesh, cfg, cache_s, b)
         batch_s = input_specs(cfg, shape)
         b_sh = batch_shardings(mesh, batch_s)
-        plan_s = None
-        pl_sh = None
-        if prepare_plan:
-            plan_s = jax.eval_shape(
-                lambda p: prepare_params(p, cfg, quant_state=quant_state),
-                params_s)
-            pl_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), plan_s)
+        plan_s = rt.plan
+        pl_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), plan_s) \
+            if plan_s is not None else None
 
+    step = rt.serve_cell_step(shape.kind, b, shape.seq_len)
     if shape.kind == "prefill":
-        def step(params, plan, batch):
-            with use_mesh(mesh), use_quant_state(quant_state):
-                cache = cache_fn(b, shape.seq_len)
-                logits, new_cache, _ = apply_fn(params, batch, cache=cache,
-                                                mode="prefill", plan=plan)
-                return jnp.argmax(logits[:, -1], -1), new_cache
-
         return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
                     args=(params_s, plan_s, batch_s),
                     in_shardings=(p_sh, pl_sh, b_sh),
                     out_shardings=(None, c_sh))
-
-    def step(params, plan, cache, batch):
-        with use_mesh(mesh), use_quant_state(quant_state):
-            logits, new_cache, _ = apply_fn(params, batch, cache=cache,
-                                            mode="decode", plan=plan)
-            return jnp.argmax(logits[:, -1], -1), new_cache
 
     return Cell(arch=arch, shape=shape, cfg=cfg, step_fn=step,
                 args=(params_s, plan_s, cache_s, batch_s),

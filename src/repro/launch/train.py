@@ -20,12 +20,13 @@ import sys
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.data.synthetic import TokenStream
 from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import MOE_FFN_SHARD_DATA, make_train_config
 from repro.models.registry import ARCHS, build_model, get_config
-from repro.train.loop import Trainer, make_train_step, shardings_for
+from repro.train.loop import Trainer
 
 
 def main(argv=None):
@@ -74,14 +75,17 @@ def main(argv=None):
         return b
 
     with use_mesh(mesh):
-        train_step, opt_init = make_train_step(apply_fn, cfg, tc)
         params = init_fn(jax.random.PRNGKey(args.seed))
-        opt_state = opt_init(params)
-        p_sh, o_sh = shardings_for(
-            mesh, params, opt_state, tc,
-            moe_ffn_shard_data=args.arch in MOE_FFN_SHARD_DATA)
-        params = jax.device_put(params, p_sh)
-        opt_state = jax.device_put(opt_state, o_sh)
+        # the Runtime owns the execution context; train_setup hands back
+        # the sharded, donated, jit'd step (metrics carry per-step ad_ops)
+        moe_fsdp = args.arch in MOE_FFN_SHARD_DATA
+        rt = runtime.compile(cfg, params, mesh=mesh, tc=tc, donate=True,
+                             plan=None, fns=(init_fn, apply_fn, None),
+                             moe_ffn_shard_data=moe_fsdp)
+        jitted, opt_init, p_sh, o_sh = rt.train_setup(
+            moe_ffn_shard_data=moe_fsdp)
+        params = rt.params                     # placed onto p_sh by compile
+        opt_state = jax.device_put(opt_init(params), o_sh)
 
         start = 0
         if args.resume and args.ckpt_dir:
@@ -95,10 +99,6 @@ def main(argv=None):
                 start = step0
                 print(f"resumed from step {start}")
 
-        jitted = jax.jit(train_step,
-                         in_shardings=(p_sh, o_sh, None, None),
-                         out_shardings=(p_sh, o_sh, None),
-                         donate_argnums=(0, 1))
         trainer = Trainer(train_step=jitted, batch_at=batch_at, tc=tc,
                           ckpt_dir=args.ckpt_dir)
         params, opt_state, report = trainer.run(params, opt_state,

@@ -1,5 +1,11 @@
 """repro.pim — the ReRAM crossbar datapath substrate (ISAAC-style, paper §II).
 
+FRONT DOOR: most consumers should not stack this module's contexts by hand —
+``repro.runtime.compile(cfg, params)`` resolves the backend, per-layer
+registers, and the crossbar programming plan into one explicit ``Runtime``
+whose entry points return ``(out, AdOpsReport)``.  The pieces below are the
+substrate that Runtime (and custom datapaths) build on:
+
 ``backend``   the unified PIM execution-backend API: a ``PimBackend``
               registry (exact | fake_quant | pallas | bit_exact) behind the
               single contract ``backend(x, w, trq) -> PimOut(y, ad_ops)``,

@@ -1,0 +1,13 @@
+"""repro.runtime — the front door of the stack.
+
+``compile(cfg, params)`` resolves the whole execution context (mesh,
+PIM backend, per-layer SAR registers, weight-stationary crossbar plan,
+parameter placement) into one explicit :class:`Runtime` whose jit'd entry
+points each return ``(out, AdOpsReport)``.  See ``runtime.py`` for the
+full story; ``ServeEngine``, ``launch.serve``/``launch.train``, the
+launch cells, the benchmarks, and the examples are all thin clients of
+this object.
+"""
+from .runtime import AdOpsReport, Runtime, compile
+
+__all__ = ["AdOpsReport", "Runtime", "compile"]

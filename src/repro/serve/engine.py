@@ -1,5 +1,18 @@
 """Batched serving engine: continuous batching over a paged KV cache.
 
+The engine is a thin client of :mod:`repro.runtime`: construct a compiled
+``Runtime`` first and hand it over —
+
+    rt = repro.runtime.compile(cfg, params, quant_state=qs)
+    engine = ServeEngine(rt, max_batch=8, max_len=512)
+
+the Runtime owns the execution context (backend, per-layer SAR registers,
+weight-stationary plan, mesh/placement) and the jit'd prefill /
+prefill_cont / decode steps; the engine owns scheduling, the paged block
+pool, and per-request attribution of each call's ``AdOpsReport``.  The old
+``ServeEngine(cfg, apply_fn, cache_fn, params, ...)`` signature remains as
+a deprecated shim that compiles a temporary Runtime (one warning).
+
 Production shape (vLLM-style, sized down to what a dry-runnable JAX core
 needs):
 
@@ -20,18 +33,18 @@ needs):
   slot is scattered back.  Gather/scatter is pure data movement, which is
   why paged decode is bitwise-identical to the dense slot engine
   (``paged=False``), kept as the reference for the equivalence suite;
-* weight-stationary plan cache: ``prepare_params`` runs once at engine
-  init (the crossbar programming pass) and the resulting ``PimPlan`` is
-  passed into every jit'd prefill/decode step, so per-token work is
-  activations-only — no max-|w| rescan, re-cast, or re-slicing per layer
-  per token.  Bitwise identical to the dynamic path; ``plan=False``
-  restores it for A/B runs;
-* per-request A/D-energy metering: every prefill/decode jit call returns
-  the summed ``PimOut.ad_ops`` of its ``pim_mvm`` calls (threaded through
-  the layer scans by ``repro.pim.backend.traced_ad_ops``); the engine
-  attributes them to requests (prefill ops exactly, decode ops split over
-  the slots that stepped) so ``stats()`` reports per-request conversion
-  counts and SAR energy (Eq. 6) next to tokens/s and TTFT.
+* weight-stationary plan cache: ``repro.runtime.compile`` programs the
+  crossbars once (``prepare_params``) and the Runtime threads the frozen
+  ``PimPlan`` through every jit'd prefill/decode step, so per-token work
+  is activations-only — no max-|w| rescan, re-cast, or re-slicing per
+  layer per token.  Bitwise identical to the dynamic path; compile with
+  ``plan=False`` to A/B it;
+* per-request A/D-energy metering: every Runtime call returns an
+  ``AdOpsReport`` with the summed ``PimOut.ad_ops`` of its ``pim_mvm``
+  calls; the engine attributes them to requests (prefill ops exactly,
+  decode ops split over the slots that stepped) so ``stats()`` reports
+  per-request conversion counts and SAR energy (Eq. 6) next to tokens/s
+  and TTFT.
 
 The engine is mesh-agnostic: under ``use_mesh`` the same code paths run
 pjit'd with the KV-cache shardings from ``serve.kvcache``.
@@ -40,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -47,12 +61,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.energy import adc_energy_pj
-from repro.core.quant_state import QuantState, use_quant_state
+from repro.core.quant_state import QuantState
 from repro.dist.sharding import _ACTIVE as _MESH_ACTIVE
-from repro.pim.backend import traced_ad_ops
-from repro.pim.plan import (PimPlan, check_plan, has_prepared,
-                            prepare_params, quant_state_token)
 from .kvcache import PagedKVCache, ZERO_PAGE, pool_pspecs
+
+# legacy-signature shim state: ServeEngine(cfg, apply_fn, cache_fn, params)
+# warns exactly once per process before compiling a temporary Runtime
+_LEGACY_WARNED = False
 
 
 @dataclasses.dataclass
@@ -125,14 +140,19 @@ def _attn_only(cfg) -> bool:
 
 
 class ServeEngine:
-    """Continuous-batching serving loop around (prefill, decode) steps.
+    """Continuous-batching serving loop around a compiled ``Runtime``.
+
+    ``ServeEngine(rt, max_batch=..., max_len=...)`` — the Runtime carries
+    the execution context (backend / QuantState / plan / mesh); bake
+    overrides in with ``repro.runtime.compile`` or ``rt.with_overrides``
+    before constructing the engine.
 
     ``paged=True`` (default) runs the block-pool cache with prefix reuse;
     ``paged=False`` keeps the dense slot cache — the reference
     implementation the paged path is tested bitwise against.
     """
 
-    def __init__(self, cfg, apply_fn, cache_fn, params, *,
+    def __init__(self, runtime, apply_fn=None, cache_fn=None, params=None, *,
                  max_batch: int = 8, max_len: int = 512,
                  extra_inputs: Optional[Callable[[int, int], dict]] = None,
                  quant_state: Optional[QuantState] = None,
@@ -141,46 +161,46 @@ class ServeEngine:
                  prefix_reuse: bool = True,
                  num_blocks: Optional[int] = None,
                  rng_seed: int = 0):
-        self.cfg = cfg
-        self.apply_fn = apply_fn
-        self.params = params
+        from repro.runtime import Runtime
+        from repro.runtime import compile as rt_compile
+        if isinstance(runtime, Runtime):
+            if apply_fn is not None or cache_fn is not None \
+                    or params is not None:
+                raise TypeError("ServeEngine(runtime) takes no "
+                                "apply_fn/cache_fn/params — the Runtime "
+                                "owns them")
+            if quant_state is not None or plan is not True:
+                raise TypeError(
+                    "quant_state/plan are Runtime state now; bake them in "
+                    "with repro.runtime.compile(cfg, params, "
+                    "quant_state=..., plan=...) or rt.with_overrides(...)")
+            rt = runtime
+        else:
+            # legacy signature: ServeEngine(cfg, apply_fn, cache_fn, params,
+            # quant_state=..., plan=...) — forwards into a temporary Runtime
+            global _LEGACY_WARNED
+            if not _LEGACY_WARNED:
+                _LEGACY_WARNED = True
+                warnings.warn(
+                    "ServeEngine(cfg, apply_fn, cache_fn, params, ...) is "
+                    "deprecated; compile a Runtime first — "
+                    "rt = repro.runtime.compile(cfg, params, "
+                    "quant_state=..., plan=...); ServeEngine(rt, ...)",
+                    DeprecationWarning, stacklevel=2)
+            rt = rt_compile(runtime, params, quant_state=quant_state,
+                            plan=plan, fns=(None, apply_fn, cache_fn),
+                            place=False)
+        # the Runtime is the execution context: cfg/params/quant_state/plan
+        # are mirrored as attributes for reporting (telemetry reads them)
+        self.rt = rt
+        self.cfg = cfg = rt.cfg
+        self.apply_fn = rt.apply_fn
+        self.params = rt.params
+        self.quant_state = rt.quant_state
+        self.plan = rt.plan
+        cache_fn = rt.cache_fn
         self.max_batch = max_batch
         self.max_len = max_len
-        # per-layer SAR registers (Algorithm-1 output): installed around
-        # every prefill/decode trace so each pim_linear resolves its own
-        # calibrated TRQParams instead of the global cfg.trq default
-        self.quant_state = quant_state
-        # crossbar programming cache: prepare ONCE at engine init (the
-        # weight-stationary premise — weights are programmed into the
-        # arrays once), then pass the plan into every jit'd prefill/decode
-        # step so no weight-side state is re-derived per token.  Bitwise
-        # identical to the dynamic path (tests/test_plan.py).
-        # plan=True -> build here; a prebuilt PimPlan is validated against
-        # these params (stale-plan guard); plan=False/None -> dynamic.
-        # plan=True is best-effort: a custom backend registered without a
-        # prepared path (the register_backend extension point) serves
-        # dynamically instead of failing engine construction.
-        if plan is True:
-            self.plan = prepare_params(params, cfg,
-                                       quant_state=quant_state) \
-                if has_prepared(cfg.pim_backend) else None
-        elif isinstance(plan, PimPlan):
-            if plan.backend != cfg.pim_backend:
-                raise ValueError(
-                    f"plan was programmed for backend {plan.backend!r} but "
-                    f"the engine serves {cfg.pim_backend!r} — every "
-                    f"pim_linear would silently fall back to the dynamic "
-                    f"path; re-run prepare_params for this backend")
-            if plan.qs_token != quant_state_token(quant_state):
-                raise ValueError(
-                    "plan was programmed against a different QuantState "
-                    "than this engine serves — prepared registers would "
-                    "silently diverge from the dynamic datapath; re-run "
-                    "prepare_params(params, cfg, quant_state=...) with the "
-                    "engine's register file")
-            self.plan = check_plan(plan, params)
-        else:
-            self.plan = None
         # extra_inputs(batch, seq) -> dict of extra batch entries (modality
         # stubs: 'embeds' for vlm/audio frontends)
         self.extra_inputs = extra_inputs or (lambda b, s: {})
@@ -193,7 +213,7 @@ class ServeEngine:
                                    num_blocks=num_blocks)
             self.block_size = self.kv.block_size
             self.state_cache = self.kv.make_state(max_batch)
-            mesh = _MESH_ACTIVE.get("mesh")
+            mesh = rt.mesh or _MESH_ACTIVE.get("mesh")
             if mesh is not None and self.kv.pools:
                 self.kv.pools = jax.device_put(
                     self.kv.pools, pool_pspecs(mesh, cfg, self.kv.pools))
@@ -211,10 +231,6 @@ class ServeEngine:
         self._uid = 0
         self._key = jax.random.PRNGKey(rng_seed)
         self._prefill_cache_fn = cache_fn
-        self._decode_jit = jax.jit(self._decode_step)
-        self._prefill_jit = jax.jit(self._prefill_step,
-                                    static_argnames=("plen",))
-        self._prefill_cont_jit = jax.jit(self._prefill_cont_step)
         self._scatter_jit = jax.jit(scatter_cache, static_argnames=())
 
     # -- request lifecycle ---------------------------------------------------
@@ -228,36 +244,10 @@ class ServeEngine:
         self.queue.append(r)
         return r
 
-    # -- jit'd step functions --------------------------------------------------
-
-    def _prefill_step(self, params, plan, tokens, extra, plen: int):
-        """tokens: (1, plen_padded); returns (last_logits, batch=1 cache,
-        summed A/D ops of every pim_mvm in the trace)."""
-        with use_quant_state(self.quant_state), traced_ad_ops() as tally:
-            cache = self._prefill_cache_fn(1, self.max_len)
-            batch = {"tokens": tokens, **extra}
-            logits, cache, _ = self.apply_fn(params, batch, cache=cache,
-                                             mode="prefill", plan=plan)
-            return logits[:, -1], cache, tally.value
-
-    def _prefill_cont_step(self, params, plan, tokens, positions, cache):
-        """Continued prefill: append the suffix tokens to a warm cache that
-        already holds ``positions[0]`` prefix tokens (prefix-reuse path).
-        The cache buffer is trimmed to prefix+suffix so the attention
-        reductions have exactly the monolithic-prefill extent."""
-        with use_quant_state(self.quant_state), traced_ad_ops() as tally:
-            batch = {"tokens": tokens, "positions": positions}
-            logits, cache, _ = self.apply_fn(params, batch, cache=cache,
-                                             mode="prefill_cont", plan=plan)
-            return logits[:, -1], cache, tally.value
-
-    def _decode_step(self, params, plan, cache, tokens, extra):
-        """tokens: (max_batch, 1); one token for every slot."""
-        with use_quant_state(self.quant_state), traced_ad_ops() as tally:
-            batch = {"tokens": tokens, **extra}
-            logits, cache, _ = self.apply_fn(params, batch, cache=cache,
-                                             mode="decode", plan=plan)
-            return logits[:, -1], cache, tally.value
+    # -- jit'd step functions: Runtime entry points ---------------------------
+    # (the old _prefill_step/_prefill_cont_step/_decode_step collapsed into
+    # rt.prefill / rt.prefill_cont / rt.decode — the Runtime installs the
+    # execution context and returns each call's AdOpsReport)
 
     def _sample(self, logits: jax.Array, temps: np.ndarray) -> np.ndarray:
         self._key, k = jax.random.split(self._key)
@@ -356,15 +346,13 @@ class ServeEngine:
             table1[0, :reuse_n] = shared
             dense1 = self.kv.assemble(state1, table1)
             positions = np.arange(L, padded, dtype=np.int32)[None]
-            last_logits, small, ops = self._prefill_cont_jit(
-                self.params, self.plan, jnp.asarray(toks[:, L:]),
-                jnp.asarray(positions), dense1)
+            (last_logits, small), rep = self.rt.prefill_cont(
+                jnp.asarray(toks[:, L:]), jnp.asarray(positions), dense1)
             r.reused_tokens = L
         else:
-            last_logits, small, ops = self._prefill_jit(
-                self.params, self.plan, jnp.asarray(toks), extra,
-                plen=padded)
-        self._meter(r, ops, prefill=True)
+            (last_logits, small), rep = self.rt.prefill(
+                jnp.asarray(toks), extra, max_len=self.max_len)
+        self._meter(r, rep.ad_ops, prefill=True)
 
         if self.paged and self.kv.specs:
             n_blk = min(-(-seq_valid // bs), self.kv.pages_per_slot)
@@ -463,14 +451,14 @@ class ServeEngine:
             temps[i] = self.slots[i].temperature
         extra = self.extra_inputs(self.max_batch, 1)
         cache = self._decode_cache()
-        logits, new_cache, ops = self._decode_jit(
-            self.params, self.plan, cache, jnp.asarray(toks), extra)
+        (logits, new_cache), rep = self.rt.decode(jnp.asarray(toks), cache,
+                                                  extra)
         self._writeback(new_cache, active)
         # batched MVMs convert all resident rows together; attribute the
         # step's conversions evenly across the slots that stepped (total is
         # conserved: sum over requests == sum of per-call PimOut.ad_ops)
-        share = float(ops) / len(active)
-        self.total_ad_ops += float(ops)
+        share = float(rep.ad_ops) / len(active)
+        self.total_ad_ops += float(rep.ad_ops)
         nxt = self._sample(logits, temps)
         for i in active:
             r = self.slots[i]

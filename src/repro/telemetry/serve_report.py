@@ -34,9 +34,13 @@ def request_rows(requests: Iterable) -> list:
 def serve_report(engine) -> dict:
     """Aggregate engine stats + per-request rows (JSON-ready)."""
     st = engine.stats()
+    rt = getattr(engine, "rt", None)
     return {
         "arch": engine.cfg.name,
-        "pim_backend": engine.cfg.pim_backend,
+        # the Runtime's resolved backend is authoritative (a --backend /
+        # with_overrides sweep may diverge from cfg.pim_backend)
+        "pim_backend": rt.backend if rt is not None else
+        engine.cfg.pim_backend,
         "paged": engine.paged,
         "prefix_reuse": engine.prefix_reuse,
         "block_size": engine.block_size,

@@ -198,13 +198,13 @@ def test_pallas_reachable_from_model_config_and_context(rng):
 
 
 # ---------------------------------------------------------------------------
-# pim_mode deprecation shim
+# pim_mode removal (deprecation cycle completed in the runtime PR)
 # ---------------------------------------------------------------------------
 
-def test_pim_mode_replace_shim_warns_and_maps():
+def test_pim_mode_removed_with_clear_error():
     from repro.models.registry import get_config
     cfg = get_config("llama3.2-3b", smoke=True)
-    with pytest.warns(DeprecationWarning, match="pim_backend"):
-        cfg2 = cfg.replace(pim_mode="fake_quant")
-    assert cfg2.pim_backend == "fake_quant"
-    assert cfg2.pim_mode == "fake_quant"        # read alias stays quiet
+    with pytest.raises(TypeError, match="pim_backend"):
+        cfg.replace(pim_mode="fake_quant")
+    assert not hasattr(cfg, "pim_mode")          # read alias gone too
+    assert cfg.replace(pim_backend="fake_quant").pim_backend == "fake_quant"

@@ -39,15 +39,15 @@ def _build(arch, backend="fake_quant"):
 
 def _capture_active_logits(eng):
     rows = []
-    orig = eng._decode_jit
+    orig = eng.rt.decode
 
-    def wrapped(params, plan, cache, toks, extra):
-        out = orig(params, plan, cache, toks, extra)
+    def wrapped(toks, cache, extra=None):
+        (last, new_cache), rep = orig(toks, cache, extra)
         act = [i for i, r in enumerate(eng.slots) if r is not None]
-        rows.append(np.asarray(out[0])[act])
-        return out
+        rows.append(np.asarray(last)[act])
+        return (last, new_cache), rep
 
-    eng._decode_jit = wrapped
+    eng.rt.decode = wrapped
     return rows
 
 

@@ -99,6 +99,33 @@ def test_json_round_trip(tmp_path, rng):
             assert getattr(p, f) == getattr(p2, f)
 
 
+def test_json_schema_is_versioned(tmp_path, rng):
+    """Saved states stamp the schema version; pre-versioning files load as
+    schema 1; a snapshot from a NEWER schema fails loudly instead of
+    silently misparsing the registers."""
+    import json
+    from repro.core.quant_state import QUANT_STATE_VERSION
+    _, qs = _calibrated_state(rng)
+    path = save_quant_state(str(tmp_path / "qs.json"), qs)
+    with open(path) as f:
+        d = json.load(f)
+    assert d["version"] == QUANT_STATE_VERSION == 1
+
+    legacy = dict(d)
+    del legacy["version"]                       # pre-versioning file
+    p2 = str(tmp_path / "legacy.json")
+    with open(p2, "w") as f:
+        json.dump(legacy, f)
+    assert len(load_quant_state(p2)) == len(qs)
+
+    future = dict(d, version=QUANT_STATE_VERSION + 1)
+    p3 = str(tmp_path / "future.json")
+    with open(p3, "w") as f:
+        json.dump(future, f)
+    with pytest.raises(ValueError, match="version"):
+        load_quant_state(p3)
+
+
 def test_checkpoint_dir_round_trip(tmp_path, rng):
     """A quant state saved next to a checkpoint restores from the dir."""
     from repro.ckpt.checkpoint import save, restore
@@ -185,7 +212,9 @@ def test_unrolled_model_exposes_per_depth_names(rng):
 
 
 def test_serve_engine_applies_quant_state(rng):
-    """ServeEngine plumbs quant_state into its jit'd prefill/decode steps."""
+    """The engine's Runtime carries quant_state into its jit'd
+    prefill/decode steps."""
+    from repro import runtime
     from repro.serve.engine import ServeEngine
     cfg = get_config("llama3.2-3b", smoke=True).replace(
         pim_backend="fake_quant", param_dtype="bfloat16", remat="none")
@@ -194,10 +223,9 @@ def test_serve_engine_applies_quant_state(rng):
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
 
     def prefill_logits(qs):
-        eng = ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=2,
-                          max_len=32, quant_state=qs)
-        logits, _, _ops = eng._prefill_jit(params, eng.plan, toks, {},
-                                           plen=8)
+        eng = ServeEngine(runtime.compile(cfg, params, quant_state=qs),
+                          max_batch=2, max_len=32)
+        (logits, _), _rep = eng.rt.prefill(toks, {}, max_len=32)
         return np.asarray(logits)
 
     base = prefill_logits(None)

@@ -1,0 +1,433 @@
+"""repro.runtime parity suite: the compiled Runtime must be BITWISE
+identical (tokens, y, ad_ops) to the pre-refactor ambient-context paths
+across every backend and model family; explicit Runtime state must win over
+nested contexts; with_overrides must re-prepare (never run stale); the
+deprecated ServeEngine signature must warn exactly once."""
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.core.quant_state import (QuantState, quant_state_from_calibration,
+                                    use_quant_state)
+from repro.core.trq import make_params
+from repro.models.registry import build_model, get_config
+from repro.pim import (has_prepared, pim_mvm, prepare_params, traced_ad_ops,
+                       use_backend)
+from repro.pim.plan import quant_state_token
+
+BACKENDS = ("exact", "fake_quant", "pallas", "bit_exact")
+ARCHS = ("llama3.2-3b", "rwkv6-7b", "whisper-medium")
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny(arch: str, backend: str, **over):
+    """Small same-family config: every backend (incl. the O(k_i*k_w)
+    bit-exact audit path) runs prefill+decode in seconds."""
+    cfg = get_config(arch, smoke=True)
+    kw = dict(remat="none", pim_backend=backend, n_layers=2, d_model=64,
+              n_heads=2, n_kv_heads=2, d_ff=96, vocab_size=64)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = 2
+    kw.update(over)
+    return cfg.replace(**kw)
+
+
+def _batch(rng, cfg, b=1, s=6):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                   jnp.int32)}
+    if cfg.encoder_layers:
+        batch["embeds"] = jnp.zeros((b, s, cfg.d_model), jnp.float32)
+    return batch
+
+
+def _crush_qs():
+    """A register file degenerate enough that applying it visibly changes
+    fake_quant logits — the probe for 'did the QuantState reach the trace'."""
+    return QuantState(rules=((r".", make_params(n_r1=1, n_r2=1, m=0,
+                                                delta_r1=16.0,
+                                                signed=True)),))
+
+
+# ---------------------------------------------------------------------------
+# acceptance criterion: Runtime path == ambient-context path, bitwise
+# (logits AND ad_ops), all four backends x llama / rwkv / enc-dec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_runtime_matches_context_path_bitwise(rng, arch, backend):
+    """prefill + decode through rt.apply/rt.prefill/rt.decode vs the exact
+    pre-refactor recipe (hand-stacked use_quant_state + traced_ad_ops around
+    a jit'd apply_fn with a hand-threaded plan)."""
+    cfg = _tiny(arch, backend)
+    init_fn, apply_fn, cache_fn = build_model(cfg)
+    params = init_fn(KEY)
+    plan = prepare_params(params, cfg) if has_prepared(backend) else None
+    batch = _batch(rng, cfg)
+    cache = cache_fn(1, 8)
+    step_tok = {"tokens": jnp.asarray([[3]], jnp.int32)}
+
+    # the pre-refactor path: contexts stacked by hand, jit'd like the old
+    # ServeEngine step functions
+    @jax.jit
+    def legacy_prefill(params, plan, batch, cache):
+        with use_quant_state(None), traced_ad_ops() as t:
+            logits, c, _ = apply_fn(params, batch, cache=cache,
+                                    mode="prefill", plan=plan)
+            return logits, c, t.value
+
+    @jax.jit
+    def legacy_decode(params, plan, batch, cache):
+        with use_quant_state(None), traced_ad_ops() as t:
+            logits, c, _ = apply_fn(params, batch, cache=cache,
+                                    mode="decode", plan=plan)
+            return logits[:, -1], c, t.value
+
+    l1a, c_a, ops1a = legacy_prefill(params, plan, batch, cache)
+    l2a, _, ops2a = legacy_decode(params, plan, step_tok, c_a)
+
+    rt = runtime.compile(cfg, params)
+    assert rt.backend == backend
+    (l1b, c_b, _aux), rep1 = rt.apply(batch, cache=cache, mode="prefill")
+    (l2b, _), rep2 = rt.decode(step_tok["tokens"], c_b)
+
+    np.testing.assert_array_equal(np.asarray(l1a), np.asarray(l1b))
+    np.testing.assert_array_equal(np.asarray(l2a), np.asarray(l2b))
+    for xa, xb in zip(jax.tree_util.tree_leaves(c_a),
+                      jax.tree_util.tree_leaves(c_b)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    assert float(ops1a) == float(rep1.ad_ops)
+    assert float(ops2a) == float(rep2.ad_ops)
+    if backend != "exact":
+        assert float(rep1.ad_ops) > 0.0
+        assert rep1.ad_energy_pj > 0.0
+
+
+def test_runtime_prefill_entry_matches_engine_recipe(rng):
+    """rt.prefill (fresh cache inside the trace) == the legacy engine's
+    _prefill_step recipe, bitwise."""
+    cfg = _tiny("llama3.2-3b", "fake_quant", param_dtype="bfloat16")
+    init_fn, apply_fn, cache_fn = build_model(cfg)
+    params = init_fn(KEY)
+    plan = prepare_params(params, cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+
+    @jax.jit
+    def legacy(params, plan, tokens):
+        with use_quant_state(None), traced_ad_ops() as t:
+            cache = cache_fn(1, 32)
+            logits, c, _ = apply_fn(params, {"tokens": tokens}, cache=cache,
+                                    mode="prefill", plan=plan)
+            return logits[:, -1], c, t.value
+
+    la, ca, opsa = legacy(params, plan, toks)
+    rt = runtime.compile(cfg, params)
+    (lb, cb), rep = rt.prefill(toks, max_len=32)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for xa, xb in zip(jax.tree_util.tree_leaves(ca),
+                      jax.tree_util.tree_leaves(cb)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    assert float(opsa) == float(rep.ad_ops)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "rwkv6-7b"])
+def test_serve_engine_runtime_vs_legacy_shim_bitwise(rng, arch):
+    """ServeEngine(Runtime) and the deprecated legacy signature generate
+    identical tokens and per-request A/D ops."""
+    from repro.serve.engine import ServeEngine
+    cfg = _tiny(arch, "fake_quant", param_dtype="bfloat16")
+    init_fn, apply_fn, cache_fn = build_model(cfg)
+    params = init_fn(KEY)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (9, 17, 5)]
+
+    def drain(eng):
+        for pr in prompts:
+            eng.submit(pr, max_new_tokens=4)
+        done = eng.run()
+        return {r.uid: (r.generated, r.ad_ops) for r in done}, \
+            eng.total_ad_ops
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy, legacy_total = drain(ServeEngine(cfg, apply_fn, cache_fn,
+                                                 params, max_batch=2,
+                                                 max_len=32))
+    rt = runtime.compile(cfg, params)
+    new, new_total = drain(ServeEngine(rt, max_batch=2, max_len=32))
+    assert legacy_total == new_total > 0
+    assert legacy == new
+
+
+def test_runtime_train_step_matches_legacy_loop(rng):
+    """rt.train_step == the pre-refactor make_train_step recipe: params and
+    loss bitwise over two steps (the ad-ops side output must not perturb
+    the optimizer math)."""
+    from repro.configs.base import TrainConfig
+    from repro.train.loop import make_train_step
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    tc = TrainConfig(learning_rate=1e-3, total_steps=4, warmup_steps=1)
+    init_fn, apply_fn, _ = build_model(cfg)
+    params = init_fn(KEY)
+    batches = [{"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)} for _ in range(2)]
+    batches = [dict(b, labels=b["tokens"]) for b in batches]
+
+    train_step, opt_init = make_train_step(apply_fn, cfg, tc)
+    jitted = jax.jit(train_step)
+    p_a, o_a = params, opt_init(params)
+    for i, b in enumerate(batches):
+        p_a, o_a, m_a = jitted(p_a, o_a, b, i)
+
+    rt = runtime.compile(cfg, params, tc=tc)
+    p_b, o_b = params, rt.opt_init()
+    for i, b in enumerate(batches):
+        (p_b, o_b, m_b), rep = rt.train_step(p_b, o_b, b, i)
+    assert float(m_a["loss"]) == float(m_b["loss"])
+    assert float(rep.ad_ops) == float(m_b["ad_ops"]) > 0.0
+    for xa, xb in zip(jax.tree_util.tree_leaves(p_a),
+                      jax.tree_util.tree_leaves(p_b)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_runtime_mvm_matches_pim_linear(rng):
+    """rt.mvm resolves the layer's weights/plan/registers exactly like the
+    in-model pim_linear — including depth slicing of scanned stacks."""
+    from repro.models.layers import cdtype, pim_linear
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(KEY)
+    rt = runtime.compile(cfg, params)
+    # compute-dtype activations: the plan freezes weights at that dtype,
+    # exactly like the in-model pim_linear call
+    x = jnp.asarray(rng.normal(0, 1, (3, cfg.d_model)), cdtype(cfg))
+    for depth in (0, 1):
+        name = f"layer_{depth}/attn/wq"
+        y, rep = rt.mvm(x, layer=name)
+        w = params["periods"]["layer_0"]["attn"]["wq"]["w"][depth]
+        with traced_ad_ops() as t:
+            y_ref = pim_linear({"w": w}, x, cfg, name=name)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+        assert float(rep.ad_ops) == float(t.value) > 0.0
+    # lm_head: unstacked node, reachable when embeddings are untied
+    cfg2 = _tiny("llama3.2-3b", "fake_quant", tie_embeddings=False)
+    init2, _, _ = build_model(cfg2)
+    params2 = init2(KEY)
+    rt2 = runtime.compile(cfg2, params2)
+    y2, _ = rt2.mvm(x, layer="lm_head")
+    assert y2.shape == (3, cfg2.vocab_size)
+    with pytest.raises(KeyError, match="no layer"):
+        rt.mvm(x, layer="layer_0/attn/nope")
+
+
+def test_runtime_mvm_agrees_with_raw_pim_mvm(rng):
+    """The front-door MVM and the raw registry call agree bitwise when fed
+    the same weight slice and registers."""
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(KEY)
+    rt = runtime.compile(cfg, params, plan=None)    # dynamic path
+    x = jnp.asarray(rng.normal(0, 1, (2, cfg.d_model)), jnp.float32)
+    y, rep = rt.mvm(x, layer="layer_0/attn/wq")
+    w = params["periods"]["layer_0"]["attn"]["wq"]["w"][0]
+    from repro.models.layers import trq_params_from_cfg
+    out = pim_mvm(x, w.astype(x.dtype), trq_params_from_cfg(cfg.trq),
+                  backend="fake_quant", ste=True, auto_range=True,
+                  delta_grid=cfg.trq.delta_grid)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(out.y))
+    assert float(rep.ad_ops) == float(out.ad_ops)
+
+
+# ---------------------------------------------------------------------------
+# context interplay: explicit Runtime state wins over nested contexts
+# ---------------------------------------------------------------------------
+
+def test_runtime_wins_over_nested_use_backend_and_quant_state(rng):
+    """A Runtime entry point traced INSIDE hostile use_backend /
+    use_quant_state contexts must compute exactly what the Runtime owns."""
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    init_fn, apply_fn, cache_fn = build_model(cfg)
+    params = init_fn(KEY)
+    batch = _batch(rng, cfg)
+    cache = cache_fn(1, 8)
+
+    rt = runtime.compile(cfg, params)
+    (l_plain, _, _), rep_plain = rt.apply(batch, cache=cache, mode="prefill")
+
+    # fresh Runtime so the trace itself happens inside the hostile contexts
+    rt_fresh = runtime.compile(cfg, params)
+    with use_backend("exact"), use_quant_state(_crush_qs()):
+        (l_ctx, _, _), rep_ctx = rt_fresh.apply(batch, cache=cache,
+                                                mode="prefill")
+    np.testing.assert_array_equal(np.asarray(l_plain), np.asarray(l_ctx))
+    assert float(rep_plain.ad_ops) == float(rep_ctx.ad_ops) > 0.0
+
+    # sanity: the same contexts DO change the bare ambient path
+    with use_backend("exact"):
+        with traced_ad_ops() as t:
+            apply_fn(params, batch, cache=cache, mode="prefill")
+        assert float(t.value) == 0.0            # ambient exact: no ops
+
+    # and compile-time resolution still inherits ambient contexts
+    with use_backend("exact"):
+        rt_inherit = runtime.compile(cfg, params)
+    assert rt_inherit.backend == "exact"
+    qs = _crush_qs()
+    with use_quant_state(qs):
+        rt_qs = runtime.compile(cfg, params)
+    assert rt_qs.quant_state is qs
+    assert rt_qs.plan.qs_token == quant_state_token(qs)
+
+
+# ---------------------------------------------------------------------------
+# with_overrides: share what is valid, re-prepare what is not
+# ---------------------------------------------------------------------------
+
+def test_with_overrides_plan_reuse_and_invalidation(rng):
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(KEY)
+    rt = runtime.compile(cfg, params)
+    assert rt.plan is not None and rt.plan.backend == "fake_quant"
+
+    # nothing plan-relevant changed -> the programmed image is shared
+    assert rt.with_overrides().plan is rt.plan
+    assert rt.with_overrides(donate=True).plan is rt.plan
+
+    # backend fingerprint mismatch -> re-prepared, never stale
+    rt_pl = rt.with_overrides(backend="pallas")
+    assert rt_pl.plan is not rt.plan and rt_pl.plan.backend == "pallas"
+
+    # QuantState fingerprint mismatch -> re-prepared with the new registers
+    qs = quant_state_from_calibration(
+        {"layer_0/attn/wq": make_params(delta_r1=0.5, signed=True)})
+    rt_qs = rt.with_overrides(quant_state=qs)
+    assert rt_qs.plan is not rt.plan
+    assert rt_qs.plan.qs_token == quant_state_token(qs)
+    # ... and clearing them re-prepares back to the default registers
+    assert rt_qs.with_overrides(quant_state=None).plan.qs_token is None
+
+    # overrides are literal: an explicit quant_state=None must NOT be
+    # re-resolved from an ambient use_quant_state context (regression)
+    with use_quant_state(qs):
+        cleared = rt_qs.with_overrides(quant_state=None)
+    assert cleared.quant_state is None and cleared.plan.qs_token is None
+
+    # a backend without a prepared path serves dynamically (best-effort)
+    from repro.pim import PimOut, register_backend
+    from repro.pim.backend import _BACKENDS
+
+    @register_backend("probe_rt")
+    def probe(x, w, trq=None, **_):
+        return PimOut(x @ w.astype(x.dtype), jnp.float32(0.0))
+
+    try:
+        assert rt.with_overrides(backend="probe_rt").plan is None
+    finally:
+        _BACKENDS.pop("probe_rt", None)
+
+
+def test_with_overrides_results_match_fresh_compile(rng):
+    """An overridden Runtime is bitwise the Runtime you would have compiled
+    directly — the cheap derivation changes nothing about the math."""
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    init_fn, _, cache_fn = build_model(cfg)
+    params = init_fn(KEY)
+    batch = _batch(rng, cfg)
+    cache = cache_fn(1, 8)
+    rt = runtime.compile(cfg, params)
+    for target in ("pallas", "exact", "bit_exact"):
+        (l_o, _, _), rep_o = rt.with_overrides(backend=target).apply(
+            batch, cache=cache, mode="prefill")
+        fresh = runtime.compile(cfg.replace(pim_backend=target), params)
+        (l_f, _, _), rep_f = fresh.apply(batch, cache=cache, mode="prefill")
+        np.testing.assert_array_equal(np.asarray(l_o), np.asarray(l_f))
+        assert float(rep_o.ad_ops) == float(rep_f.ad_ops)
+
+
+def test_compile_validates_prebuilt_plan(rng):
+    """compile(plan=<PimPlan>) rejects backend / QuantState / geometry
+    mismatches instead of silently serving a stale crossbar image."""
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    other = _tiny("llama3.2-3b", "fake_quant", d_model=96, d_ff=128)
+    init_fn, _, _ = build_model(cfg)
+    init_o, _, _ = build_model(other)
+    params = init_fn(KEY)
+    wrong_backend = prepare_params(params, cfg, backend="pallas")
+    with pytest.raises(ValueError, match="pallas"):
+        runtime.compile(cfg, params, plan=wrong_backend)
+    qs = _crush_qs()
+    no_qs_plan = prepare_params(params, cfg)
+    with pytest.raises(ValueError, match="QuantState"):
+        runtime.compile(cfg, params, quant_state=qs, plan=no_qs_plan)
+    stale = prepare_params(init_o(KEY), other)
+    with pytest.raises(ValueError, match="stale plan"):
+        runtime.compile(cfg, params, plan=stale)
+    ok = prepare_params(params, cfg, quant_state=qs)
+    rt = runtime.compile(cfg, params, quant_state=qs, plan=ok)
+    assert rt.plan is ok
+
+
+# ---------------------------------------------------------------------------
+# deprecated shim + pytree + abstract mode
+# ---------------------------------------------------------------------------
+
+def test_legacy_serve_engine_shim_warns_exactly_once(rng):
+    import repro.serve.engine as eng_mod
+    from repro.serve.engine import ServeEngine
+    cfg = _tiny("llama3.2-3b", "exact")
+    init_fn, apply_fn, cache_fn = build_model(cfg)
+    params = init_fn(KEY)
+    prev = eng_mod._LEGACY_WARNED
+    eng_mod._LEGACY_WARNED = False
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=1,
+                        max_len=16)
+            ServeEngine(cfg, apply_fn, cache_fn, params, max_batch=1,
+                        max_len=16)
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)
+               and "Runtime" in str(x.message)]
+        assert len(dep) == 1, "legacy shim must warn exactly once"
+    finally:
+        eng_mod._LEGACY_WARNED = prev
+    # Runtime-first construction rejects legacy-only kwargs loudly
+    rt = runtime.compile(cfg, params)
+    with pytest.raises(TypeError, match="with_overrides"):
+        from repro.serve.engine import ServeEngine as SE
+        SE(rt, max_batch=1, max_len=16, plan=False)
+
+
+def test_runtime_is_a_pytree(rng):
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    init_fn, _, cache_fn = build_model(cfg)
+    params = init_fn(KEY)
+    rt = runtime.compile(cfg, params)
+    leaves, treedef = jax.tree_util.tree_flatten(rt)
+    rt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rt2, runtime.Runtime)
+    assert rt2.backend == rt.backend and rt2.cfg is rt.cfg
+    batch = _batch(rng, cfg)
+    cache = cache_fn(1, 8)
+    (la, _, _), _ = rt.apply(batch, cache=cache, mode="prefill")
+    (lb, _, _), _ = rt2.apply(batch, cache=cache, mode="prefill")
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_abstract_runtime_lowers(rng):
+    """compile over eval_shape stand-ins gives an abstract Runtime whose
+    apply entry lowers (the cell/dry-run contract)."""
+    cfg = _tiny("llama3.2-3b", "fake_quant")
+    init_fn, _, cache_fn = build_model(cfg)
+    params_s = jax.eval_shape(init_fn, KEY)
+    rt = runtime.compile(cfg, params_s)
+    assert rt.abstract and rt.plan is not None
+    batch_s = {"tokens": jax.ShapeDtypeStruct((1, 8), jnp.int32)}
+    cache_s = jax.eval_shape(lambda: cache_fn(1, 16))
+    lowered = rt.lower(batch_s, cache=cache_s, mode="prefill")
+    assert lowered is not None
