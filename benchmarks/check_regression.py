@@ -15,6 +15,12 @@ Rules
   deterministic per-conversion averages on pinned inputs, and the prepared
   (plan-cache) and decode-shaped fast paths are bitwise-identical claims —
   a drifted count means the datapaths silently diverged, not jitter.
+* ``*identity`` records (the zero-noise <-> bit_exact bitwise claims from
+  the noise sweep) gate EXACTLY at 1.0 — any drift means the noisy
+  datapath stopped reducing to the ideal one.
+* noise-sweep divergence records: ``mean_div``/``worst_div`` are
+  lower-is-better counts (pinned seeds -> deterministic), ``top1_agree``
+  is higher-is-better.
 * Wall-clock metrics gate at ``--timing-threshold`` (default 2.0 = 200%):
   CPU interpret-mode timings on shared CI runners jitter far beyond 25%,
   so the tight gate is reserved for counts while timings only catch
@@ -54,6 +60,12 @@ def classify(path: str):
         return +1, "count"     # deterministic reuse counters
     if leaf == "mean_ad_ops":
         return -1, "exact"     # pinned-input per-conversion average
+    if leaf.endswith("identity"):
+        return -1, "exact"     # zero-noise <-> bit_exact bitwise claims
+    if leaf == "top1_agree":
+        return +1, "count"     # noise-sweep argmax agreement (pinned seeds)
+    if leaf.endswith("_div"):
+        return -1, "count"     # noise-sweep logits divergence (pinned seeds)
     if "ad_ops" in leaf or "ad_energy" in leaf:
         return -1, "count"
     if _is_timing(leaf):

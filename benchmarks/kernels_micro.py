@@ -81,8 +81,9 @@ def run(quick: bool = False) -> dict:
     # -- registered-backend sweep: one shape, every datapath ---------------
     # same MVM through the whole repro.pim.backend registry so BENCH_*.json
     # tracks the fast path (pallas) against the oracle paths over time.
-    # bit_exact runs lossless (its registers live on the raw BL grid) and a
-    # smaller shape — it is O(k_i*k_w*G) matmuls by design.
+    # bit_exact (and noisy, which wraps its datapath) runs lossless (its
+    # registers live on the raw BL grid) and a smaller shape — it is
+    # O(k_i*k_w*G) matmuls by design.
     mb, kb, nb = (32, 256, 32) if quick else (64, 512, 64)
     ab = jnp.asarray(rng.normal(0, 1, (mb, kb)).astype(np.float32))
     wb = jnp.asarray(rng.normal(0, 1, (kb, nb)).astype(np.float32))
@@ -90,7 +91,7 @@ def run(quick: bool = False) -> dict:
     wb_s = wb[:128, : nb // 2]
     shape_note = f"m{mb}.k{kb}.n{nb}"
     for name in list_backends():
-        small = name == "bit_exact"
+        small = name in ("bit_exact", "noisy")
         aa, ww = (ab_s, wb_s) if small else (ab, wb)
         trq = None if small else p
         us = timeit(lambda a_, w_: pim_mvm(a_, w_, trq, backend=name).y,
@@ -134,6 +135,12 @@ def run(quick: bool = False) -> dict:
         f"m8.k{lm_cfg.d_model}.n{rout.shape[-1]}.plan."
         f"mean_ad_ops={float(_rep.ad_ops) / conv:.2f}",
         mean_ad_ops=float(_rep.ad_ops) / conv)
+
+    # -- robustness lane: Monte-Carlo accuracy-under-noise records ---------
+    # (zero-noise bitwise-identity + divergence curves; same JSON, same
+    # check_regression gate — see benchmarks/noise_sweep.py)
+    from . import noise_sweep
+    records.update(noise_sweep.run(quick))
     return records
 
 

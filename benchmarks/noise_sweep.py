@@ -1,0 +1,175 @@
+"""Monte-Carlo accuracy-under-noise sweep: the robustness lane.
+
+Does the truncated SAR search survive real device physics?  For each
+registered tiny arch this sweeps the two failure families the related work
+motivates — per-read bit-line noise (``read_sigma``, call-side, vmapped
+over PRNG keys) and stuck-at cell faults (``sa0``, device-side, vmapped
+over fault seeds) — and records logits divergence vs the ideal
+``bit_exact`` datapath:
+
+* ``zero_noise_identity``  1.0 iff the all-zeros ``CrossbarModel`` is
+  bitwise ``bit_exact`` (logits AND ad_ops) — gated EXACTLY by
+  ``check_regression``.
+* ``mean_div`` / ``worst_div``  mean / worst-case relative L2 divergence
+  of the last-token logits over the Monte-Carlo draws (deterministic:
+  pinned inputs, pinned seeds — gated as counts).
+* ``top1_agree``  fraction of argmax decisions unchanged under noise
+  (higher is better).
+* ``ad_ops_ratio``  noisy / ideal conversion-cycle count — whether the
+  Eq. 6/9 savings trajectory itself is noise-stable.
+
+Everything runs under ``jax.vmap`` over the stochastic leaf (key or
+seed): one compile per sweep point, N devices per execution — the
+Monte-Carlo contract ISSUE 9 pins.
+
+  PYTHONPATH=src python -m benchmarks.noise_sweep [--quick] [--json PATH]
+
+``benchmarks.kernels_micro`` merges these records into its lane, so they
+land in ``BENCH_kernels.json`` and the CI trajectory gate.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import build_model, get_config
+from repro.pim import CrossbarModel, traced_ad_ops, use_crossbar_model
+
+from .common import emit
+
+N_MC = 4                                     # Monte-Carlo draws per point
+
+
+def _tiny(arch: str, backend: str):
+    cfg = get_config(arch, smoke=True)
+    kw = dict(remat="none", pim_backend=backend, n_layers=2, d_model=64,
+              n_heads=2, n_kv_heads=2, d_ff=96, vocab_size=64)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = 2
+    return cfg.replace(**kw)
+
+
+def _slug(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def _mc_stats(noisy, ref):
+    """(N_MC, B, V) noisy last-token logits vs (B, V) reference."""
+    ref = np.asarray(ref, np.float64)
+    noisy = np.asarray(noisy, np.float64)
+    div = (np.linalg.norm((noisy - ref).reshape(noisy.shape[0], -1), axis=1)
+           / max(np.linalg.norm(ref), 1e-12))
+    agree = np.mean(np.argmax(noisy, -1) == np.argmax(ref, -1))
+    return float(div.mean()), float(div.max()), float(agree)
+
+
+def run(quick: bool = False) -> dict:
+    """Prints CSV lines, returns JSON-ready records keyed
+    ``noise.<arch>.<point>`` (merged into the kernels lane)."""
+    records: dict = {}
+
+    def rec(name, us, derived="", **extra):
+        emit(name, us, derived)
+        records[name] = {"us": float(us), "derived": derived, **extra}
+
+    archs = ("llama3.2-3b",) if quick else ("llama3.2-3b", "rwkv6-7b")
+    sigmas = (0.1, 0.3) if quick else (0.05, 0.1, 0.2, 0.4)
+    safs = (0.01, 0.05) if quick else (0.005, 0.01, 0.02, 0.05)
+
+    for arch in archs:
+        slug = _slug(arch)
+        cfg = _tiny(arch, "noisy")
+        init_fn, apply_fn, cache_fn = build_model(cfg)
+        params = init_fn(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 6)), jnp.int32)
+
+        def fwd(params, toks, model):
+            """Last-token logits + ad_ops under ``model`` (None: ideal).
+            Dynamic path (plan=None) so device-side leaves stay vmappable."""
+            with use_crossbar_model(model), traced_ad_ops() as t:
+                cache = cache_fn(toks.shape[0], 8)
+                logits, _, _ = apply_fn(params, {"tokens": toks},
+                                        cache=cache, mode="prefill")
+                return logits[:, -1].astype(jnp.float32), t.value
+
+        # -- zero-noise identity: the CI-gated bitwise claims --------------
+        # (a) the all-zeros model (static shortcut straight to bit_exact);
+        # (b) TRACED zeros — the full analog-f32 noisy datapath must still
+        #     reduce to a bitwise identity (perturb by exactly +0.0/*1.0)
+        ref, ref_ops = jax.jit(fwd)(params, toks, None)
+        z, z_ops = jax.jit(
+            lambda p, t: fwd(p, t, CrossbarModel()))(params, toks)
+        ident = float(np.array_equal(np.asarray(ref), np.asarray(z))
+                      and float(ref_ops) == float(z_ops))
+        tz, tz_ops = jax.jit(lambda p, t, z0: fwd(p, t, CrossbarModel(
+            g_sigma=z0, sa0=z0, sa1=z0, read_sigma=z0, ir_drop=z0,
+            adc_offset=z0, adc_sigma=z0)))(params, toks, jnp.float32(0))
+        t_ident = float(np.array_equal(np.asarray(ref), np.asarray(tz))
+                        and float(ref_ops) == float(tz_ops))
+        rec(f"noise.{slug}.zero_noise", 0.0,
+            "all-zeros CrossbarModel vs bit_exact, logits+ad_ops bitwise",
+            zero_noise_identity=ident, traced_zero_identity=t_ident)
+
+        # -- accuracy vs read noise: vmap over N_MC PRNG keys --------------
+        keys = jax.random.split(jax.random.PRNGKey(7), N_MC)
+        for sig in sigmas:
+            mc = jax.jit(jax.vmap(
+                lambda p, t, k, s=sig: fwd(
+                    p, t, CrossbarModel(read_sigma=s, key=k)),
+                in_axes=(None, None, 0)))
+            t0 = time.perf_counter()
+            noisy, ops = jax.block_until_ready(mc(params, toks, keys))
+            us = (time.perf_counter() - t0) * 1e6
+            mean_d, worst_d, agree = _mc_stats(noisy, ref)
+            tag = f"{sig:.2f}".replace(".", "p")
+            rec(f"noise.{slug}.read_sigma_{tag}", us,
+                f"sigma={sig}.n_mc={N_MC}", mean_div=mean_d,
+                worst_div=worst_d, top1_agree=agree,
+                ad_ops_ratio=float(jnp.mean(ops) / ref_ops))
+
+        # -- accuracy vs stuck-at faults: vmap over N_MC device seeds ------
+        seeds = jnp.arange(N_MC)
+        for rate in safs:
+            mc = jax.jit(jax.vmap(
+                lambda p, t, sd, r=rate: fwd(
+                    p, t, CrossbarModel(sa0=r, seed=sd)),
+                in_axes=(None, None, 0)))
+            t0 = time.perf_counter()
+            noisy, ops = jax.block_until_ready(mc(params, toks, seeds))
+            us = (time.perf_counter() - t0) * 1e6
+            mean_d, worst_d, agree = _mc_stats(noisy, ref)
+            tag = f"{rate:.3f}".replace(".", "p")
+            rec(f"noise.{slug}.saf_{tag}", us,
+                f"sa0={rate}.n_mc={N_MC}", mean_div=mean_d,
+                worst_div=worst_d, top1_agree=agree,
+                ad_ops_ratio=float(jnp.mean(ops) / ref_ops))
+    return records
+
+
+def main(argv=None) -> int:
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    records = run(args.quick)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"bench": "noise", "quick": args.quick,
+                       "records": records}, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -77,8 +77,9 @@ class ModelConfig:
 
     # --- PIM / TRQ integration ---
     # name in the repro.pim.backend registry: exact | fake_quant | pallas |
-    # bit_exact (serving default set by the launcher; training stays exact
-    # = paper).  Overridable at runtime by a use_backend(...) context.
+    # bit_exact | noisy (serving default set by the launcher; training
+    # stays exact = paper; noisy needs a CrossbarModel to differ from
+    # bit_exact).  Overridable at runtime by a use_backend(...) context.
     pim_backend: str = "exact"
     trq: TRQConfig = TRQConfig()
 

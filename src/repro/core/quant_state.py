@@ -193,5 +193,18 @@ def save_quant_state(path: str, qs: QuantState) -> str:
 
 
 def load_quant_state(path: str) -> QuantState:
-    with open(_resolve_path(path)) as f:
-        return quant_state_from_dict(json.load(f))
+    """Read a register file written by :func:`save_quant_state`.  A
+    truncated or corrupt file (e.g. a partial copy of a checkpoint dir)
+    raises ``ValueError`` naming the path instead of a bare
+    ``JSONDecodeError`` from deep inside the json module."""
+    resolved = _resolve_path(path)
+    with open(resolved) as f:
+        try:
+            payload = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"quant state file {resolved!r} is not valid JSON "
+                f"({e.msg} at line {e.lineno}); the file is truncated or "
+                f"corrupt — recalibrate (quant_state_from_calibration) or "
+                f"restore it from the checkpoint") from e
+    return quant_state_from_dict(payload)

@@ -29,6 +29,7 @@ from repro import runtime
 from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import ARCHS, build_model, get_config
+from repro.pim import list_backends
 from repro.serve.engine import ServeEngine
 from repro.telemetry.serve_report import format_energy_report, serve_report
 
@@ -47,7 +48,7 @@ def main(argv=None):
                          "request (exercises prefix reuse)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--pim", default="fake_quant",
-                    choices=["exact", "fake_quant", "pallas", "bit_exact"],
+                    choices=sorted(list_backends()),
                     help="PIM execution backend (repro.pim.backend registry)")
     ap.add_argument("--backend", default=None,
                     help="late backend override applied via "

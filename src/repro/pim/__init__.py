@@ -23,6 +23,10 @@ substrate that Runtime (and custom datapaths) build on:
               into a ``PimPlan``; ``pim_mvm(x, plan=...)`` then skips all
               weight-side recomputation — the weight-stationary premise
               (paper §II) as an artifact.
+``noise``     the device non-ideality seam: ``CrossbarModel`` (conductance
+              variation, stuck-at faults, read/ADC noise, IR-drop) + the
+              ``noisy`` backend wrapping the bit_exact datapath; an
+              all-zeros model is bitwise ``bit_exact``.
 """
 from .crossbar import (PimConfig, auto_range_fit, bit_exact_mvm,
                        fake_quant_mvm, collect_bl_samples, offset_encode,
@@ -35,7 +39,11 @@ from .backend import (PimOut, PimBackend, register_backend, get_backend,
                       reemit_ad_ops)
 from .plan import (LayerPlan, PimPlan, prepare_linear, prepare_params,
                    check_plan, subplan, register_prepared, run_prepared,
-                   has_prepared, quant_state_token)
+                   register_prepare_hook, has_prepared, quant_state_token)
+# importing .noise registers the `noisy` backend + its prepare recipe
+from .noise import (CrossbarModel, use_crossbar_model,
+                    active_crossbar_model, crossbar_token,
+                    register_noise_aware, is_noise_aware)
 # per-layer register state rides with the backend API (defined in core to
 # keep the dependency direction core <- pim)
 from repro.core.quant_state import (QuantState, use_quant_state,
@@ -55,7 +63,10 @@ __all__ = [
     # crossbar programming cache (weight-stationary plans)
     "LayerPlan", "PimPlan", "prepare_linear", "prepare_params",
     "check_plan", "subplan", "register_prepared", "run_prepared",
-    "has_prepared", "quant_state_token",
+    "register_prepare_hook", "has_prepared", "quant_state_token",
+    # device non-ideality seam
+    "CrossbarModel", "use_crossbar_model", "active_crossbar_model",
+    "crossbar_token", "register_noise_aware", "is_noise_aware",
     # behavioral simulator
     "PimConfig", "bit_exact_mvm", "fake_quant_mvm", "auto_range_fit",
     "collect_bl_samples", "offset_encode", "bitplanes", "group_weights",

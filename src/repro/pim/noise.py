@@ -1,0 +1,418 @@
+"""Device non-ideality modeling: the ``CrossbarModel`` seam + the ``noisy``
+backend (ROADMAP item 5).
+
+All stock datapaths assume ideal crossbars.  Real ReRAM arrays are not:
+conductances land off-target when programmed (cycle-to-cycle / device-to-
+device variation), a fraction of cells is stuck at G_min/G_max (SA0/SA1
+yield faults), bit-line currents fluctuate per read, long columns droop
+under IR-drop, and the SAR ADC adds fixed-pattern offset plus thermal
+noise.  :class:`CrossbarModel` packages those knobs as one dataclass
+pytree — every field optional and independently zeroable — and the
+``noisy`` backend threads them through ``bit_exact``'s sliced bit-line
+datapath, returning the same ``PimOut(y, ad_ops)`` so A/D metering,
+``AdOpsReport`` and the bench gates work unchanged.
+
+Two fault families, two sampling times (mirroring the hardware):
+
+* **Device-side** (``g_sigma``, ``sa0``, ``sa1``, ``adc_offset``): frozen
+  at *programming* time.  Draws derive from ``fold_in(PRNGKey(seed),
+  value_salt(w_int))`` — a pure function of the fault seed and the
+  programmed integer weights — so the dynamic path and a
+  ``prepare_params``-baked plan (``LayerPlan.w_analog``/``adc_off``)
+  sample the *same device* bit-for-bit, and distinct layers (distinct
+  weights) get independent faults without any threading through model
+  code.
+* **Call-side** (``read_sigma``, ``adc_sigma``; ``ir_drop`` is
+  deterministic): drawn per conversion from ``fold_in(model.key,
+  value_salt(partial_sums))``.  Salting by the data decorrelates layers,
+  scan iterations and decode steps without carrying PRNG state through
+  the layer scan; same key + same inputs -> same draws (reproducible),
+  new key -> a fresh noise realization.
+
+Zero is exact: a field left at ``0.0`` contributes *nothing* — the
+all-zeros model routes straight through ``bit_exact`` and is bitwise
+identical to it (y AND ad_ops; gated in CI), and even traced zeros (e.g.
+under ``vmap`` over a batch of models) perturb by exactly ``+0.0``/
+``*1.0``.  ``seed`` and ``key`` are ordinary pytree leaves, so Monte-
+Carlo sweeps ``jax.vmap`` over fault seeds and/or read-noise keys — see
+``benchmarks/noise_sweep.py``.
+
+This seam is the stable interface for the yield/degradation scenario
+family (redundant-column remapping, drift models, retention): a
+real-hardware client implements the same contract.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import hashlib
+import json
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trq import TRQParams, trq_ad_ops, trq_quant
+from .backend import (PimConfig, PimOut, _stable_recip, active_backend,  # noqa: F401
+                      bit_exact_backend, register_backend)
+from .crossbar import _group, _shift_add, bitplanes, weight_planes
+from .plan import LayerPlan, register_prepare_hook, register_prepared
+
+
+def _static_zero(v) -> bool:
+    """True when ``v`` is *statically* known to be zero (None, python/numpy
+    zero, concrete size-1 array).  Tracers are never statically zero — the
+    math path still reduces to an exact identity for traced zeros."""
+    if v is None:
+        return True
+    if isinstance(v, jax.core.Tracer):
+        return False
+    try:
+        return float(v) == 0.0
+    except (TypeError, ValueError):
+        return False
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CrossbarModel:
+    """One crossbar's non-ideality budget.  All fields are pytree leaves
+    (vmap over any of them); all default to the ideal device.
+
+    Rates/sigmas are in natural units of the datapath: conductances are
+    0/1 cell values, partial sums live on the ``[0, xbar]`` BL integer
+    grid the ADC samples.
+    """
+
+    g_sigma: jax.typing.ArrayLike = 0.0    # relative conductance-programming std
+    sa0: jax.typing.ArrayLike = 0.0        # stuck-at-0 (G_min) cell fault rate
+    sa1: jax.typing.ArrayLike = 0.0        # stuck-at-1 (G_max) cell fault rate
+    read_sigma: jax.typing.ArrayLike = 0.0  # per-read BL current noise std (LSB)
+    ir_drop: jax.typing.ArrayLike = 0.0    # per-column droop coeff: p*(1-c*p/xbar)
+    adc_offset: jax.typing.ArrayLike = 0.0  # fixed-pattern per-BL ADC offset std
+    adc_sigma: jax.typing.ArrayLike = 0.0  # ADC thermal (input-referred) std
+    seed: jax.typing.ArrayLike = 0         # device/fault seed (non-negative)
+    key: Optional[jax.Array] = None        # per-call PRNG key (None: derive
+    #                                        from seed -> deterministic reads)
+
+    _DEVICE_FIELDS = ("g_sigma", "sa0", "sa1", "adc_offset")
+    _CALL_FIELDS = ("read_sigma", "ir_drop", "adc_sigma")
+
+    @property
+    def device_null(self) -> bool:
+        """No programming-time (weight-side) faults: a plan prepared
+        against this model keeps the ideal int8 cell planes."""
+        return all(_static_zero(getattr(self, f))
+                   for f in self._DEVICE_FIELDS)
+
+    @property
+    def call_null(self) -> bool:
+        return all(_static_zero(getattr(self, f)) for f in self._CALL_FIELDS)
+
+    @property
+    def is_null(self) -> bool:
+        """Statically ideal: the noisy backend shortcuts to bit_exact."""
+        return self.device_null and self.call_null
+
+    def replace(self, **kw) -> "CrossbarModel":
+        return dataclasses.replace(self, **kw)
+
+    def plan_token(self) -> Optional[str]:
+        """Fingerprint of the DEVICE side (fault seed + programming-time
+        field values) — what ``prepare_params`` stamps into
+        ``PimPlan.cm_token`` so a plan baked for one device is rejected
+        when executed against another.  ``None`` for a device-ideal model:
+        call-side noise never invalidates a programmed plan."""
+        if self.device_null:
+            return None
+        try:
+            vals = {f: float(getattr(self, f)) for f in self._DEVICE_FIELDS}
+            vals["seed"] = int(self.seed)
+        except (TypeError, jax.errors.ConcretizationTypeError,
+                jax.errors.TracerArrayConversionError) as e:
+            raise ValueError(
+                "plan fingerprints need a concrete CrossbarModel — program "
+                "plans outside jit/vmap (Monte-Carlo over devices runs the "
+                "dynamic path; see benchmarks/noise_sweep.py)") from e
+        blob = json.dumps(vals, sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def crossbar_token(model: Optional[CrossbarModel]) -> Optional[str]:
+    """``model.plan_token()``, None-propagating (the plan-fingerprint
+    counterpart of :func:`repro.pim.plan.quant_state_token`)."""
+    return None if model is None else model.plan_token()
+
+
+# backends that consume a CrossbarModel.  Runtime.compile rejects a
+# non-null model on any other backend — the stock ideal datapaths would
+# silently ignore it.  Custom noise-aware datapaths register here.
+_NOISE_AWARE: set = {"noisy"}
+
+
+def register_noise_aware(name: str) -> None:
+    """Declare backend ``name`` consumes the ambient CrossbarModel."""
+    _NOISE_AWARE.add(name)
+
+
+def is_noise_aware(name: str) -> bool:
+    return name in _NOISE_AWARE
+
+
+# ---------------------------------------------------------------------------
+# ambient selection (mirrors use_backend / use_quant_state)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: dict = {"cm": None}
+
+
+@contextlib.contextmanager
+def use_crossbar_model(model: Optional[CrossbarModel]):
+    """Install ``model`` for every noise-aware ``pim_mvm`` in the dynamic
+    extent.  ``None`` is a no-op passthrough.  Nestable."""
+    prev = _ACTIVE["cm"]
+    if model is not None:
+        _ACTIVE["cm"] = model
+    try:
+        yield model
+    finally:
+        _ACTIVE["cm"] = prev
+
+
+def active_crossbar_model() -> Optional[CrossbarModel]:
+    return _ACTIVE["cm"]
+
+
+# ---------------------------------------------------------------------------
+# seeded draws (device side == pure function of (seed, programmed weights))
+# ---------------------------------------------------------------------------
+
+def value_salt(t: jax.Array) -> jax.Array:
+    """Deterministic uint32 content-hash of a tensor — the ``fold_in`` salt
+    that makes PRNG draws a pure function of the data.  Position-mixed so
+    permuted tensors salt differently; cheap (one fused elementwise pass +
+    reduction over an already-materialized tensor)."""
+    tf = jnp.ravel(t).astype(jnp.float32)
+    mix = jnp.cos(jnp.arange(tf.size, dtype=jnp.float32) * 0.618033988749895)
+    return jax.lax.bitcast_convert_type(jnp.sum(tf * mix), jnp.uint32)
+
+
+def _device_key(model: CrossbarModel, salt) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(model.seed), salt)
+
+
+def _call_key(model: CrossbarModel, salt) -> jax.Array:
+    base = model.key if model.key is not None else \
+        jax.random.fold_in(_device_key(model, jnp.uint32(0)),
+                           jnp.uint32(0xCA11))
+    return jax.random.fold_in(base, salt)
+
+
+def perturb_planes(planes: jax.Array, model: CrossbarModel,
+                   salt) -> jax.Array:
+    """int8 0/1 cell planes -> f32 analog conductances with programming
+    variation and stuck-at faults.  Seeded and content-addressed: the same
+    (seed, w_int) always yields the same device, whether sampled at plan
+    time or per call."""
+    g = planes.astype(jnp.float32)
+    if model.device_null:
+        return g
+    kd = _device_key(model, salt)
+    k_sa, k_var = jax.random.split(kd)
+    if not _static_zero(model.g_sigma):
+        eta = jax.random.normal(k_var, g.shape, jnp.float32)
+        g = g * (1.0 + jnp.asarray(model.g_sigma, jnp.float32) * eta)
+    if not (_static_zero(model.sa0) and _static_zero(model.sa1)):
+        # one uniform field decides both fault kinds (disjoint tail events;
+        # sa0 + sa1 <= 1): SA0 pins the cell to G_min, SA1 to G_max
+        u = jax.random.uniform(k_sa, g.shape, jnp.float32)
+        g = jnp.where(u < jnp.asarray(model.sa0, jnp.float32), 0.0, g)
+        g = jnp.where(u >= 1.0 - jnp.asarray(model.sa1, jnp.float32), 1.0, g)
+    return g
+
+
+def adc_offsets(model: CrossbarModel, salt, shape) -> Optional[jax.Array]:
+    """Fixed-pattern per-(weight-plane, group, bit-line) ADC offsets —
+    device-side, so they bake into plans.  ``shape``: (k_w, G, N)."""
+    if _static_zero(model.adc_offset):
+        return None
+    k = jax.random.fold_in(_device_key(model, salt), jnp.uint32(0x0FF5))
+    return (jnp.asarray(model.adc_offset, jnp.float32)
+            * jax.random.normal(k, shape, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# the perturbed bit-line datapath
+# ---------------------------------------------------------------------------
+
+def perturb_psums(p: jax.Array, model: CrossbarModel, cfg: PimConfig,
+                  adc_off: Optional[jax.Array] = None) -> jax.Array:
+    """Call-side physics on the (k_i, k_w, G, M, N) analog partial sums, in
+    signal order: IR-drop compression -> read noise -> ADC fixed-pattern
+    offset -> ADC thermal noise.  Statically-zero fields cost nothing;
+    traced zeros perturb by exactly +0.0/*1.0."""
+    if not _static_zero(model.ir_drop):
+        p = p * (1.0 - jnp.asarray(model.ir_drop, jnp.float32)
+                 * p * (1.0 / float(cfg.xbar)))
+    read = not _static_zero(model.read_sigma)
+    therm = not _static_zero(model.adc_sigma)
+    if read or therm:
+        ck = _call_key(model, value_salt(p))
+        k_r, k_t = jax.random.split(ck)
+        if read:
+            p = p + (jnp.asarray(model.read_sigma, jnp.float32)
+                     * jax.random.normal(k_r, p.shape, jnp.float32))
+    if adc_off is not None:
+        p = p + adc_off[None, :, :, None, :]
+    if therm:
+        p = p + (jnp.asarray(model.adc_sigma, jnp.float32)
+                 * jax.random.normal(k_t, p.shape, jnp.float32))
+    return p
+
+
+def noisy_bl_mvm(a_uint: jax.Array, analog_planes: jax.Array,
+                 trq: Optional[TRQParams], model: CrossbarModel,
+                 cfg: PimConfig, adc_off: Optional[jax.Array] = None):
+    """``bit_exact_mvm``'s bit-line datapath on *analog* (possibly faulted,
+    f32) cell planes with call-side noise injected on the partial sums
+    before the (TRQ-)ADC.  Returns (integer-valued f32 out, total ad_ops).
+
+    With ``trq=None`` the native R_ADC still digitizes: round + clip to
+    ``[0, xbar]`` — a bitwise no-op on the ideal (integer, in-range)
+    sums, but real quantization once noise pushes them off-grid."""
+    a_b = bitplanes(a_uint, cfg.k_i)                   # (k_i, M, K)
+    a_g = _group(a_b, cfg.xbar, axis=2)                # (k_i, M, G, X)
+    p = jnp.einsum("imgx,jgxn->ijgmn",
+                   a_g.astype(jnp.float32),
+                   analog_planes.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)  # (k_i,k_w,G,M,N)
+    p = perturb_psums(p, model, cfg, adc_off)
+    if trq is None:
+        y_q = jnp.clip(jnp.floor(p + 0.5), 0.0, float(cfg.xbar))
+        ops = jnp.full(p.shape, cfg.r_adc, jnp.int32)
+    else:
+        y_q, ops = trq_quant(p, trq), trq_ad_ops(p, trq)
+    acc = _shift_add(y_q, cfg)
+    zp = 2 ** (cfg.k_w - 1)
+    corr = zp * jnp.sum(a_uint.astype(jnp.float32), axis=1, keepdims=True)
+    return acc - corr, jnp.sum(ops.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# the `noisy` backend (dynamic + prepared paths)
+# ---------------------------------------------------------------------------
+
+@register_backend("noisy")
+def noisy_backend(x, w, trq, *, a_scale=None, w_scale=None,
+                  pim: PimConfig = PimConfig(),
+                  crossbar_model: Optional[CrossbarModel] = None,
+                  **knobs) -> PimOut:
+    """``bit_exact`` under a :class:`CrossbarModel` (explicit argument,
+    else the ambient ``use_crossbar_model`` selection).  A missing or
+    statically-null model routes straight through ``bit_exact_backend`` —
+    bitwise identical by construction."""
+    model = crossbar_model if crossbar_model is not None \
+        else active_crossbar_model()
+    if model is None or model.is_null:
+        return bit_exact_backend(x, w, trq, a_scale=a_scale,
+                                 w_scale=w_scale, pim=pim, **knobs)
+    lead = x.shape[:-1]
+    half_a = 2 ** (pim.k_i - 1)
+    half_w = 2 ** (pim.k_w - 1)
+    # PTQ chain identical to bit_exact_backend (context-stable f32,
+    # bf16-barrier reciprocals) — the *intended* integer weights
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    a_s = a_scale if a_scale is not None else \
+        jnp.maximum(jnp.max(jnp.abs(x2)), 1e-6) * (1.0 / (half_a - 1))
+    w_s = w_scale if w_scale is not None else \
+        jnp.maximum(jnp.max(jnp.abs(wf)), 1e-6) * (1.0 / (half_w - 1))
+    a_int = jnp.clip(jnp.floor(x2 * _stable_recip(a_s) + 0.5),
+                     -half_a, half_a - 1).astype(jnp.int32)
+    w_int = jnp.clip(jnp.floor(wf * _stable_recip(w_s) + 0.5),
+                     -half_w, half_w - 1).astype(jnp.int32)
+    salt = value_salt(w_int)
+    planes = weight_planes(w_int, pim)                 # (k_w, G, X, N)
+    analog = perturb_planes(planes, model, salt)
+    adc_off = adc_offsets(model, salt,
+                          planes.shape[:-2] + planes.shape[-1:])
+    out, ops = noisy_bl_mvm(a_int + half_a, analog, trq, model, pim,
+                            adc_off)
+    # digital correction uses the intended weights: the offset-encoding
+    # zero-point is subtracted by the S+A logic, not read from the array
+    corr = half_a * jnp.sum(w_int.astype(jnp.float32), axis=0,
+                            keepdims=True)
+    y = (out - corr) * (jnp.asarray(a_s, jnp.float32)
+                        * jnp.asarray(w_s, jnp.float32))
+    return PimOut(y.reshape(*lead, w.shape[1]).astype(x.dtype), ops)
+
+
+@register_prepare_hook("noisy")
+def _prepare_noisy(w_cast, kw: dict,
+                   model: Optional[CrossbarModel]) -> LayerPlan:
+    """Programming pass for the noisy datapath: the bit_exact PTQ chain,
+    then the device-side faults baked into f32 analog planes
+    (``LayerPlan.w_analog``) + fixed-pattern ADC offsets (``adc_off``).
+    A device-null model keeps the ideal int8 ``w_planes`` payload."""
+    pim = kw["pim"]
+    half_w = 2 ** (pim.k_w - 1)
+    stacked = w_cast.ndim == 3
+    wf = w_cast.astype(jnp.float32)
+    w_scale = jnp.maximum(
+        jnp.max(jnp.abs(wf), axis=(-2, -1)), 1e-6) * (1.0 / (half_w - 1))
+    w_s = w_scale[..., None, None] if stacked else w_scale
+    w_int = jnp.clip(jnp.floor(wf * _stable_recip(w_s) + 0.5),
+                     -half_w, half_w - 1).astype(jnp.int32)
+    planes = weight_planes(w_int, pim)                 # (..., k_w, G, X, N)
+    colsum = jnp.sum(w_int.astype(jnp.float32), axis=-2)
+    base = dict(w_scale=w_scale, w_colsum=colsum, **kw)
+    if model is None or model.device_null:
+        return LayerPlan(w_planes=planes, **base)
+    off_shape = planes.shape[-4:-2] + planes.shape[-1:]   # (k_w, G, N)
+    if stacked:
+        # per-slice salts: each depth of a scanned family is its own
+        # device, matching the dynamic path's per-slice w_int hashing
+        salts = jax.vmap(value_salt)(w_int)
+        analog = jax.vmap(lambda pl, s: perturb_planes(pl, model, s))(
+            planes, salts)
+        off = None if _static_zero(model.adc_offset) else \
+            jax.vmap(lambda s: adc_offsets(model, s, off_shape))(salts)
+    else:
+        salt = value_salt(w_int)
+        analog = perturb_planes(planes, model, salt)
+        off = adc_offsets(model, salt, off_shape)
+    return LayerPlan(w_analog=analog, adc_off=off, **base)
+
+
+@register_prepared("noisy")
+def _prepared_noisy(x, lp: LayerPlan, *, a_scale=None, w_scale=None,
+                    crossbar_model: Optional[CrossbarModel] = None,
+                    **_) -> PimOut:
+    """Prepared fast path: device faults come pre-baked from the plan;
+    only call-side noise (from the explicit/ambient model) is drawn here.
+    Bitwise identical to the dynamic ``noisy`` call for the same model."""
+    if w_scale is not None:
+        raise ValueError(
+            "noisy plans cannot take a per-call w_scale override: the "
+            "programmed cell planes ARE a function of the weight scale; "
+            "re-run prepare_linear/prepare_params (or call the dynamic "
+            "backend) for a pinned grid")
+    model = crossbar_model if crossbar_model is not None \
+        else active_crossbar_model()
+    if model is None:
+        model = CrossbarModel()
+    pim = lp.pim
+    half_a = 2 ** (pim.k_i - 1)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, lp.k).astype(jnp.float32)
+    a_s = a_scale if a_scale is not None else \
+        jnp.maximum(jnp.max(jnp.abs(x2)), 1e-6) * (1.0 / (half_a - 1))
+    a_int = jnp.clip(jnp.floor(x2 * _stable_recip(a_s) + 0.5),
+                     -half_a, half_a - 1).astype(jnp.int32)
+    planes = lp.w_analog if lp.w_analog is not None else lp.w_planes
+    out, ops = noisy_bl_mvm(a_int + half_a, planes, lp.trq, model, pim,
+                            lp.adc_off)
+    y = (out - half_a * lp.w_colsum) * (jnp.asarray(a_s, jnp.float32)
+                                        * jnp.asarray(lp.w_scale,
+                                                      jnp.float32))
+    return PimOut(y.reshape(*lead, lp.n).astype(x.dtype), ops)

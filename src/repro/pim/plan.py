@@ -79,8 +79,10 @@ class LayerPlan:
     w: Optional[jax.Array] = None           # exact: compute-dtype weights
     w_g: Optional[jax.Array] = None         # fake_quant: (..., G, X, N)
     w_f32: Optional[jax.Array] = None       # pallas: f32, K/N tile-padded
-    w_planes: Optional[jax.Array] = None    # bit_exact: cell planes, int8
-    w_colsum: Optional[jax.Array] = None    # bit_exact: per-column sum w_int
+    w_planes: Optional[jax.Array] = None    # bit_exact/noisy: cell planes, int8
+    w_colsum: Optional[jax.Array] = None    # bit_exact/noisy: per-col sum w_int
+    w_analog: Optional[jax.Array] = None    # noisy: faulted conductances, f32
+    adc_off: Optional[jax.Array] = None     # noisy: fixed-pattern ADC offsets
     # --- static metadata ---
     backend: str = dataclasses.field(metadata=dict(static=True),
                                      default="exact")
@@ -106,11 +108,15 @@ class PimPlan:
     params).  ``qs_token`` fingerprints the QuantState the registers were
     resolved from, so a consumer (e.g. ``ServeEngine``) can reject a plan
     programmed against different calibration than it would serve
-    dynamically."""
+    dynamically.  ``cm_token`` does the same for the device non-ideality
+    model (fault seed + device-side field values — see
+    ``repro.pim.noise``): a plan with baked faults must not execute
+    against a different simulated device."""
 
     layers: dict
     backend: str = "exact"
     qs_token: Optional[str] = None
+    cm_token: Optional[str] = None
 
     def __len__(self) -> int:
         return len(_iter_layer_plans(self.layers))
@@ -121,8 +127,9 @@ class PimPlan:
 
 jax.tree_util.register_pytree_node(
     PimPlan,
-    lambda p: ((p.layers,), (p.backend, p.qs_token)),
-    lambda aux, ch: PimPlan(layers=ch[0], backend=aux[0], qs_token=aux[1]))
+    lambda p: ((p.layers,), (p.backend, p.qs_token, p.cm_token)),
+    lambda aux, ch: PimPlan(layers=ch[0], backend=aux[0], qs_token=aux[1],
+                            cm_token=aux[2]))
 
 
 def quant_state_token(qs) -> Optional[str]:
@@ -167,7 +174,8 @@ def subplan(plan, key: str):
 def prepare_linear(w: jax.Array, trq: Optional[TRQParams] = None, *,
                    backend: str = "exact", auto_range: bool = False,
                    delta_grid: float = 1.0, pim: PimConfig = PimConfig(),
-                   dtype=None, block_n: int = 128) -> LayerPlan:
+                   dtype=None, block_n: int = 128,
+                   crossbar_model=None) -> LayerPlan:
     """Program ONE linear's weights for ``backend``.
 
     ``w``: (K, N) — or (L, K, N) for a stacked layer family, in which case
@@ -176,7 +184,10 @@ def prepare_linear(w: jax.Array, trq: Optional[TRQParams] = None, *,
     broadcast).  ``dtype`` is the compute dtype the runtime will call with
     (``pim_linear`` hands backends ``w.astype(x.dtype)``, so the frozen
     scale must be computed on the SAME cast weights to stay bitwise
-    identical to the dynamic path)."""
+    identical to the dynamic path).  ``crossbar_model`` (a
+    ``repro.pim.noise.CrossbarModel``) reaches backends whose programming
+    recipe bakes device-side faults (``@register_prepare_hook``); the
+    stock ideal backends ignore it."""
     get_backend(backend)                       # fail fast on typos
     stacked = w.ndim == 3
     if w.ndim not in (2, 3):
@@ -226,15 +237,40 @@ def prepare_linear(w: jax.Array, trq: Optional[TRQParams] = None, *,
                          w_colsum=jnp.sum(w_int.astype(jnp.float32),
                                           axis=-2), **kw)
 
+    hook = _PREPARE_HOOKS.get(backend)
+    if hook is not None:
+        return hook(w_cast, kw, crossbar_model)
+
     raise ValueError(f"backend {backend!r} has no prepared payload; "
-                     f"register one with @register_prepared, or serve "
-                     f"dynamically (ServeEngine(plan=False))")
+                     f"register one with @register_prepared (+ a recipe "
+                     f"via @register_prepare_hook), or serve dynamically "
+                     f"(ServeEngine(plan=False))")
+
+
+# programming recipes for non-stock backends: ``fn(w_cast, kw, crossbar_
+# model) -> LayerPlan`` where ``kw`` carries the common LayerPlan kwargs
+# (trq/backend/auto_range/delta_grid/k/n/pim).  Keeps the dependency
+# direction plan <- noise (the noisy recipe registers itself on import).
+_PREPARE_HOOKS: dict = {}
+
+_STOCK_PREPARE = frozenset({"exact", "fake_quant", "pallas", "bit_exact"})
+
+
+def register_prepare_hook(name: str):
+    """Register the ``prepare_linear`` programming recipe for backend
+    ``name`` (decorator) — pair it with ``@register_prepared`` so
+    ``has_prepared`` holds."""
+    def _register(fn):
+        _PREPARE_HOOKS[name] = fn
+        return fn
+    return _register
 
 
 def has_prepared(backend: str) -> bool:
     """True when ``backend`` has both a programming recipe and a prepared
     execution path — i.e. ``prepare_params``/``pim_mvm(plan=...)`` work."""
-    return backend in _PREPARED
+    return backend in _PREPARED and (backend in _STOCK_PREPARE
+                                     or backend in _PREPARE_HOOKS)
 
 
 def _trq_is_stacked(t: TRQParams) -> bool:
@@ -280,7 +316,8 @@ def _is_linear(node, stacked: bool) -> bool:
 
 def prepare_params(params: dict, cfg, quant_state=None,
                    backend: Optional[str] = None,
-                   pim: PimConfig = PimConfig(), dtype=None) -> PimPlan:
+                   pim: PimConfig = PimConfig(), dtype=None,
+                   crossbar_model=None) -> PimPlan:
     """Walk a model parameter pytree once and program every ``pim_linear``
     weight for ``backend`` (default ``cfg.pim_backend``).
 
@@ -336,7 +373,7 @@ def prepare_params(params: dict, cfg, quant_state=None,
         return prepare_linear(node["w"], trq, backend=backend,
                               auto_range=autos.pop(),
                               delta_grid=cfg.trq.delta_grid, pim=pim,
-                              dtype=dt)
+                              dtype=dt, crossbar_model=crossbar_model)
 
     def walk(tree, prefixes, stacked, dt):
         out = {}
@@ -382,8 +419,15 @@ def prepare_params(params: dict, cfg, quant_state=None,
             r = walk(val, [key], stacked=False, dt=dt)
             if r:
                 layers[key] = r
+    # the device fingerprint rides the plan like qs_token does — duck-typed
+    # (any model exposing .plan_token() works) so plan never imports noise
+    cm_token = None
+    if crossbar_model is not None:
+        tok = getattr(crossbar_model, "plan_token", None)
+        cm_token = tok() if callable(tok) else None
     return PimPlan(layers=layers, backend=backend,
-                   qs_token=quant_state_token(quant_state))
+                   qs_token=quant_state_token(quant_state),
+                   cm_token=cm_token)
 
 
 def check_plan(plan: PimPlan, params: dict) -> PimPlan:

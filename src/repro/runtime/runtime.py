@@ -27,7 +27,8 @@ backend/QuantState so explicit Runtime state always wins over any
 
 ``rt.with_overrides(backend=..., quant_state=...)`` returns a cheap derived
 Runtime for A/B sweeps: parameters are shared, and the plan is shared too
-when its (backend, QuantState-fingerprint) still matches — anything
+when its (backend, QuantState, CrossbarModel) fingerprint still matches —
+anything
 plan-relevant that changed re-prepares (``check_plan``-guarded) instead of
 running a stale crossbar image.
 """
@@ -47,6 +48,9 @@ from repro.dist.sharding import param_pspecs, use_mesh
 from repro.dist.sharding import _ACTIVE as _MESH_ACTIVE
 from repro.pim.backend import _ACTIVE as _BACKEND_ACTIVE
 from repro.pim.backend import active_backend, get_backend, traced_ad_ops
+from repro.pim.noise import _ACTIVE as _CM_ACTIVE
+from repro.pim.noise import (CrossbarModel, active_crossbar_model,
+                             crossbar_token, is_noise_aware)
 from repro.pim.plan import (PimPlan, check_plan, has_prepared,
                             prepare_params, quant_state_token, subplan)
 
@@ -77,19 +81,21 @@ class Runtime:
     validates/programs the plan, and places parameters) — ``__init__``
     itself is dumb on purpose so pytree unflattening never re-validates.
     Registered as a pytree: traced leaves are ``(params, plan,
-    quant_state)``; everything else is static aux data.
+    quant_state, crossbar_model)``; everything else is static aux data.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, backend: str,
                  quant_state: Optional[QuantState], plan: Optional[PimPlan],
                  mesh=None, donate: bool = False,
                  tc: Optional[TrainConfig] = None,
-                 fns: Optional[tuple] = None, plan_enabled: bool = True):
+                 fns: Optional[tuple] = None, plan_enabled: bool = True,
+                 crossbar_model: Optional[CrossbarModel] = None):
         self.cfg = cfg
         self.params = params
         self.backend = backend
         self.quant_state = quant_state
         self.plan = plan
+        self.crossbar_model = crossbar_model
         self.mesh = mesh
         self.donate = donate
         self.tc = tc
@@ -114,6 +120,8 @@ class Runtime:
         return (f"Runtime({self.cfg.name}, backend={self.backend!r}, "
                 f"plan={'yes' if self.plan is not None else 'no'}, "
                 f"quant_state={'yes' if self.quant_state is not None else 'no'}, "
+                f"crossbar_model="
+                f"{'yes' if self.crossbar_model is not None else 'no'}, "
                 f"mesh={dict(self.mesh.shape) if self.mesh is not None else None})")
 
     # -- THE one audited ambient installation -------------------------------
@@ -132,13 +140,16 @@ class Runtime:
                 stack.enter_context(use_mesh(self.mesh))
             prev_b = _BACKEND_ACTIVE["backend"]
             prev_q = _QS_ACTIVE["qs"]
+            prev_c = _CM_ACTIVE["cm"]
             _BACKEND_ACTIVE["backend"] = self.backend
             _QS_ACTIVE["qs"] = self.quant_state
+            _CM_ACTIVE["cm"] = self.crossbar_model
             try:
                 yield self
             finally:
                 _BACKEND_ACTIVE["backend"] = prev_b
                 _QS_ACTIVE["qs"] = prev_q
+                _CM_ACTIVE["cm"] = prev_c
 
     def _jit(self, key, make: Callable):
         fn = self._jits.get(key)
@@ -368,41 +379,47 @@ class Runtime:
 
     def with_overrides(self, *, backend: Optional[str] = None,
                        quant_state=_UNSET, plan=_UNSET,
-                       mesh=_UNSET, donate: Optional[bool] = None
-                       ) -> "Runtime":
+                       mesh=_UNSET, donate: Optional[bool] = None,
+                       crossbar_model=_UNSET) -> "Runtime":
         """A cheap derived Runtime for A/B sweeps: parameters are shared,
         and the programmed plan is shared when its (backend,
-        QuantState-fingerprint) still matches — otherwise it re-prepares
-        (``check_plan``-guarded) instead of executing a stale crossbar
-        image.  This replaces re-entering ``use_backend`` around every
-        sweep arm.
+        QuantState-fingerprint, CrossbarModel-fingerprint) still matches —
+        otherwise it re-prepares (``check_plan``-guarded) instead of
+        executing a stale crossbar image.  This replaces re-entering
+        ``use_backend`` around every sweep arm.
 
         Overrides here are taken LITERALLY — ``quant_state=None`` means "no
-        registers" (never re-resolved from an ambient context; omit the
-        argument to keep this Runtime's state)."""
+        registers" and ``crossbar_model=None`` means "ideal device" (never
+        re-resolved from an ambient context; omit the argument to keep
+        this Runtime's state)."""
         new_backend = backend or self.backend
         if backend is not None:
             get_backend(new_backend)               # fail fast on typos
         new_qs = self.quant_state if quant_state is _UNSET else quant_state
+        new_cm = self.crossbar_model if crossbar_model is _UNSET \
+            else crossbar_model
+        _check_model_backend(new_backend, new_cm)
         if plan is _UNSET:
             plan_enabled = self._plan_enabled
             if (self.plan is not None and self.plan.backend == new_backend
-                    and self.plan.qs_token == quant_state_token(new_qs)):
+                    and self.plan.qs_token == quant_state_token(new_qs)
+                    and self.plan.cm_token == crossbar_token(new_cm)):
                 built = check_plan(self.plan, self.params)   # still valid
             elif self._plan_enabled:
                 built = _build_plan(self.cfg, self.params, new_backend,
-                                    new_qs, True, self.abstract)
+                                    new_qs, True, self.abstract, new_cm)
             else:
                 built = None
         else:
             plan_enabled = plan is True or isinstance(plan, PimPlan)
             built = _build_plan(self.cfg, self.params, new_backend, new_qs,
-                                plan, self.abstract)
+                                plan, self.abstract, new_cm)
         return Runtime(self.cfg, self.params,
                        backend=new_backend, quant_state=new_qs, plan=built,
                        mesh=self.mesh if mesh is _UNSET else mesh,
                        donate=self.donate if donate is None else donate,
-                       tc=self.tc, fns=self._fns, plan_enabled=plan_enabled)
+                       tc=self.tc, fns=self._fns, plan_enabled=plan_enabled,
+                       crossbar_model=new_cm)
 
     def save(self, path: str) -> Optional[str]:
         """Snapshot the Runtime's register file next to a checkpoint
@@ -419,30 +436,46 @@ class Runtime:
 
 
 def _rt_flatten(rt: Runtime):
-    return (rt.params, rt.plan, rt.quant_state), rt._aux()
+    return (rt.params, rt.plan, rt.quant_state,
+            rt.crossbar_model), rt._aux()
 
 
 def _rt_unflatten(aux, children):
     cfg, backend, mesh, donate, tc, plan_enabled, fns = aux
-    params, plan, qs = children
+    params, plan, qs, cm = children
     return Runtime(cfg, params, backend=backend, quant_state=qs, plan=plan,
                    mesh=mesh, donate=donate, tc=tc, fns=fns,
-                   plan_enabled=plan_enabled)
+                   plan_enabled=plan_enabled, crossbar_model=cm)
 
 
 jax.tree_util.register_pytree_node(Runtime, _rt_flatten, _rt_unflatten)
 
 
-def _build_plan(cfg, params, backend: str, quant_state, plan, abstract: bool):
-    """Resolve the ``plan`` argument for a (backend, quant_state) pair:
-    ``True`` programs (best-effort, eval-shaped when abstract), a prebuilt
-    ``PimPlan`` is validated against backend / QuantState fingerprint /
-    geometry, anything else is dynamic (``None``)."""
+def _check_model_backend(backend: str, crossbar_model) -> None:
+    """A non-null CrossbarModel on a noise-blind backend would be silently
+    ignored — every MVM would run ideal while the caller believes faults
+    are injected.  Reject the combination loudly."""
+    if (crossbar_model is not None and not crossbar_model.is_null
+            and not is_noise_aware(backend)):
+        raise ValueError(
+            f"crossbar_model carries non-idealities but backend "
+            f"{backend!r} is not noise-aware (it would silently ignore "
+            f"them); use backend='noisy' (or register_noise_aware)")
+
+
+def _build_plan(cfg, params, backend: str, quant_state, plan, abstract: bool,
+                crossbar_model=None):
+    """Resolve the ``plan`` argument for a (backend, quant_state,
+    crossbar_model) triple: ``True`` programs (best-effort, eval-shaped when
+    abstract), a prebuilt ``PimPlan`` is validated against backend /
+    QuantState fingerprint / CrossbarModel fingerprint / geometry, anything
+    else is dynamic (``None``)."""
     if plan is True:
         if not has_prepared(backend):
             return None
         prep = lambda p: prepare_params(p, cfg, quant_state=quant_state,
-                                        backend=backend)  # noqa: E731
+                                        backend=backend,
+                                        crossbar_model=crossbar_model)  # noqa: E731
         return jax.eval_shape(prep, params) if abstract else prep(params)
     if isinstance(plan, PimPlan):
         if plan.backend != backend:
@@ -457,6 +490,12 @@ def _build_plan(cfg, params, backend: str, quant_state, plan, abstract: bool):
                 "this Runtime executes — prepared registers would silently "
                 "diverge from the dynamic datapath; re-run prepare_params "
                 "with the Runtime's register file")
+        if plan.cm_token != crossbar_token(crossbar_model):
+            raise ValueError(
+                "plan was programmed against a different CrossbarModel "
+                "(or fault seed) than this Runtime executes — the baked "
+                "fault image would be stale; re-run prepare_params with "
+                "the Runtime's crossbar_model")
         return check_plan(plan, params)
     return None
 
@@ -465,7 +504,8 @@ def compile(cfg: ModelConfig, params, *, mesh=None, backend: Optional[str] = Non
             quant_state: Optional[QuantState] = None, plan: Any = True,
             donate: bool = False, tc: Optional[TrainConfig] = None,
             fns: Optional[tuple] = None, place: bool = True,
-            moe_ffn_shard_data: bool = False) -> Runtime:
+            moe_ffn_shard_data: bool = False,
+            crossbar_model: Optional[CrossbarModel] = None) -> Runtime:
     """Build a :class:`Runtime`: resolve the execution context once,
     program the crossbars once, return jit'd entry points.
 
@@ -477,6 +517,11 @@ def compile(cfg: ModelConfig, params, *, mesh=None, backend: Optional[str] = Non
       else ``cfg.pim_backend``.  Must name a registered datapath.
     * ``quant_state`` — argument, else the active ``use_quant_state``
       register file, else none (model-wide ``cfg.trq`` default).
+    * ``crossbar_model`` — argument, else the active ``use_crossbar_model``
+      device model, else none (ideal crossbars).  A non-null model
+      requires a noise-aware backend (``noisy``); weight-side faults are
+      baked into the plan (fingerprinted via ``cm_token``), read/ADC
+      noise draws per call.
     * ``plan``        — ``True`` (default) programs a weight-stationary
       ``PimPlan`` for the resolved backend/registers (best-effort: a
       custom backend without a prepared path serves dynamically);
@@ -495,12 +540,16 @@ def compile(cfg: ModelConfig, params, *, mesh=None, backend: Optional[str] = Non
     get_backend(backend)                           # fail fast on typos
     if quant_state is None:
         quant_state = active_quant_state()
+    if crossbar_model is None:
+        crossbar_model = active_crossbar_model()
+    _check_model_backend(backend, crossbar_model)
 
     leaves = jax.tree_util.tree_leaves(params)
     abstract = bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)
 
     plan_enabled = plan is True or isinstance(plan, PimPlan)
-    built = _build_plan(cfg, params, backend, quant_state, plan, abstract)
+    built = _build_plan(cfg, params, backend, quant_state, plan, abstract,
+                        crossbar_model)
 
     if place and mesh is not None and not abstract:
         from jax.sharding import NamedSharding
@@ -512,4 +561,4 @@ def compile(cfg: ModelConfig, params, *, mesh=None, backend: Optional[str] = Non
 
     return Runtime(cfg, params, backend=backend, quant_state=quant_state,
                    plan=built, mesh=mesh, donate=donate, tc=tc, fns=fns,
-                   plan_enabled=plan_enabled)
+                   plan_enabled=plan_enabled, crossbar_model=crossbar_model)

@@ -17,5 +17,22 @@ def key():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(autouse=True)
+def _pim_registry_guard():
+    """Snapshot/restore the PIM registries around every test, so a failing
+    test that registered a probe backend (or prepared/prepare-hook recipe)
+    can't leak it into later tests — e.g. a stray ``probe`` entry would
+    change ``list_backends()``-driven sweeps."""
+    from repro.pim.backend import _BACKENDS
+    from repro.pim.plan import _PREPARED, _PREPARE_HOOKS
+
+    snaps = [(reg, dict(reg)) for reg in (_BACKENDS, _PREPARED,
+                                          _PREPARE_HOOKS)]
+    yield
+    for reg, snap in snaps:
+        reg.clear()
+        reg.update(snap)
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")

@@ -34,7 +34,7 @@ def _xw(rng, m=8, k=320, n=24):
 
 def test_stock_backends_registered():
     assert set(list_backends()) >= {"exact", "fake_quant", "pallas",
-                                    "bit_exact"}
+                                    "bit_exact", "noisy"}
     for name in list_backends():
         assert callable(get_backend(name))
 
@@ -208,3 +208,22 @@ def test_pim_mode_removed_with_clear_error():
         cfg.replace(pim_mode="fake_quant")
     assert not hasattr(cfg, "pim_mode")          # read alias gone too
     assert cfg.replace(pim_backend="fake_quant").pim_backend == "fake_quant"
+
+
+# ---------------------------------------------------------------------------
+# registry hygiene: the conftest guard snapshots/restores _BACKENDS around
+# every test, so a test that registers a probe (and then fails before its
+# own cleanup) cannot leak it into later tests.  Ordered pair: the first
+# test deliberately leaks, the second must not see it.
+# ---------------------------------------------------------------------------
+
+def test_registry_guard_part1_deliberately_leaks_a_probe():
+    @register_backend("probe_leak")
+    def probe_leak(x, w, trq, **kw):                  # pragma: no cover
+        raise AssertionError("never called")
+    assert "probe_leak" in list_backends()            # visible in-test
+
+
+def test_registry_guard_part2_sees_a_clean_registry():
+    assert "probe_leak" not in list_backends()
+    assert "probe_leak" not in _BACKENDS

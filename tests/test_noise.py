@@ -1,0 +1,400 @@
+"""CrossbarModel non-ideality seam (ISSUE 9 acceptance suite).
+
+The load-bearing claims: the ``noisy`` backend with an all-zeros
+``CrossbarModel`` is BITWISE ``bit_exact`` (y AND ad_ops) — statically,
+through jit with traced zeros, and end-to-end across llama/rwkv
+prefill+decode; seeded fault injection is reproducible (same seed ->
+bitwise-same logits) and vmappable over seeds/keys for Monte-Carlo; the
+prepared (plan-baked) and dynamic paths sample the SAME device; and the
+Runtime threads the model with plan fingerprinting (stale fault images
+are rejected, never silently executed)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.core.trq import make_params
+from repro.models.registry import build_model, get_config
+from repro.pim import (CrossbarModel, active_crossbar_model, crossbar_token,
+                       pim_mvm, prepare_linear, run_prepared,
+                       use_crossbar_model)
+from repro.pim.noise import value_salt
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = ("llama3.2-3b", "rwkv6-7b")
+
+
+@pytest.fixture()
+def rng():
+    """Module-local override of the session-scoped ``rng``: these tests
+    draw their own stream so inserting this module cannot shift the inputs
+    of alphabetically-later modules (the bitwise-parity suites elsewhere
+    are input-sensitive, and tier-1 results must not depend on ordering)."""
+    return np.random.default_rng(20260808)
+
+TRQ = make_params(delta_r1=1.0, n_r1=4, n_r2=4, m=3, signed=True)
+
+
+def _tiny(arch: str, backend: str, **over):
+    cfg = get_config(arch, smoke=True)
+    kw = dict(remat="none", pim_backend=backend, n_layers=2, d_model=64,
+              n_heads=2, n_kv_heads=2, d_ff=96, vocab_size=64)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = 2
+    kw.update(over)
+    return cfg.replace(**kw)
+
+
+def _mvm_inputs(rng, m=8, k=128, n=16):
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (k, n)), jnp.float32)
+    return x, w
+
+
+def _runtime_pair(arch, rng, crossbar_model=None):
+    """(bit_exact Runtime, noisy Runtime) over the SAME params + tokens."""
+    cfg = _tiny(arch, "bit_exact")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(KEY)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 6)), jnp.int32)
+    rt_ex = runtime.compile(cfg, params)
+    rt_no = runtime.compile(cfg, params, backend="noisy",
+                            crossbar_model=crossbar_model)
+    return rt_ex, rt_no, toks
+
+
+# ---------------------------------------------------------------------------
+# acceptance criterion: zero-noise identity, end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("model", [None, CrossbarModel()],
+                         ids=["no-model", "all-zeros-model"])
+def test_zero_noise_identity_prefill_decode(rng, arch, model):
+    """noisy with a missing/all-zeros CrossbarModel == bit_exact, bitwise
+    (logits AND ad_ops), through prefill and decode."""
+    rt_ex, rt_no, toks = _runtime_pair(arch, rng, crossbar_model=model)
+    (l_ex, c_ex), rep_ex = rt_ex.prefill(toks, max_len=8)
+    (l_no, c_no), rep_no = rt_no.prefill(toks, max_len=8)
+    np.testing.assert_array_equal(np.asarray(l_ex), np.asarray(l_no))
+    assert float(rep_ex.ad_ops) == float(rep_no.ad_ops)
+
+    step = jnp.asarray([[3]], jnp.int32)
+    (d_ex, _), drep_ex = rt_ex.decode(step, c_ex)
+    (d_no, _), drep_no = rt_no.decode(step, c_no)
+    np.testing.assert_array_equal(np.asarray(d_ex), np.asarray(d_no))
+    assert float(drep_ex.ad_ops) == float(drep_no.ad_ops)
+
+
+def test_traced_zero_identity_through_jit(rng):
+    """Even when every field is a TRACED zero (no static shortcut — the
+    full analog-f32 datapath runs), the perturbations are exactly
+    +0.0/*1.0: bitwise identity vs the jitted bit_exact path (like
+    contexts: the PTQ chain is context-stable by design, so both sides
+    run fused)."""
+    x, w = _mvm_inputs(rng)
+
+    @jax.jit
+    def exact(x, w):
+        out = pim_mvm(x, w, TRQ, backend="bit_exact")
+        return out.y, out.ad_ops
+
+    @jax.jit
+    def noisy_zero(x, w, z):
+        m = CrossbarModel(g_sigma=z, sa0=z, sa1=z, read_sigma=z, ir_drop=z,
+                          adc_offset=z, adc_sigma=z)
+        with use_crossbar_model(m):
+            out = pim_mvm(x, w, TRQ, backend="noisy")
+        return out.y, out.ad_ops
+
+    ref_y, ref_ops = exact(x, w)
+    y, ops = noisy_zero(x, w, jnp.float32(0))
+    np.testing.assert_array_equal(np.asarray(ref_y), np.asarray(y))
+    assert float(ref_ops) == float(ops)
+
+
+def test_null_detection_and_zeroable_fields():
+    """Every field is independently zeroable; any single non-zero field
+    flips the right nullity flag."""
+    assert CrossbarModel().is_null
+    for f in CrossbarModel._DEVICE_FIELDS:
+        m = CrossbarModel(**{f: 0.1})
+        assert not m.device_null and m.call_null and not m.is_null
+    for f in CrossbarModel._CALL_FIELDS:
+        m = CrossbarModel(**{f: 0.1})
+        assert m.device_null and not m.call_null and not m.is_null
+    # seed/key alone never make a model non-null
+    assert CrossbarModel(seed=7, key=jax.random.PRNGKey(1)).is_null
+
+
+# ---------------------------------------------------------------------------
+# seeded reproducibility + Monte-Carlo vmappability
+# ---------------------------------------------------------------------------
+
+def test_seeded_faults_reproducible_and_seed_sensitive(rng):
+    """Same (seed, weights) -> the SAME device, bitwise; a different seed
+    -> a different device; faults actually change the result."""
+    x, w = _mvm_inputs(rng)
+    ref = pim_mvm(x, w, TRQ, backend="bit_exact")
+
+    def run(seed):
+        with use_crossbar_model(CrossbarModel(g_sigma=0.08, sa0=0.02,
+                                              seed=seed)):
+            return pim_mvm(x, w, TRQ, backend="noisy").y
+
+    y7a, y7b, y8 = run(7), run(7), run(8)
+    np.testing.assert_array_equal(np.asarray(y7a), np.asarray(y7b))
+    assert not np.array_equal(np.asarray(y7a), np.asarray(y8))
+    assert not np.array_equal(np.asarray(y7a), np.asarray(ref.y))
+
+
+def test_call_noise_key_reproducible_and_key_sensitive(rng):
+    """Read/ADC noise draws from the threaded PRNG key: same key -> same
+    draws; a fresh key -> a fresh noise realization."""
+    x, w = _mvm_inputs(rng)
+
+    def run(key):
+        with use_crossbar_model(CrossbarModel(read_sigma=0.5, adc_sigma=0.3,
+                                              key=key)):
+            return pim_mvm(x, w, TRQ, backend="noisy").y
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(42))
+    np.testing.assert_array_equal(np.asarray(run(k1)), np.asarray(run(k1)))
+    assert not np.array_equal(np.asarray(run(k1)), np.asarray(run(k2)))
+    # key=None derives deterministically from the fault seed
+    m = CrossbarModel(read_sigma=0.5)
+    with use_crossbar_model(m):
+        a = pim_mvm(x, w, TRQ, backend="noisy").y
+    with use_crossbar_model(m):
+        b = pim_mvm(x, w, TRQ, backend="noisy").y
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_monte_carlo_vmap_over_seeds_and_keys(rng):
+    """The ISSUE 9 Monte-Carlo contract: seeds and keys are pytree leaves,
+    so a sweep is ONE jit(vmap(...)) call; distinct draws give distinct
+    results."""
+    x, w = _mvm_inputs(rng)
+
+    def fwd(seed, key):
+        m = CrossbarModel(g_sigma=0.08, sa0=0.02, read_sigma=0.4,
+                          seed=seed, key=key)
+        with use_crossbar_model(m):
+            return pim_mvm(x, w, TRQ, backend="noisy").y
+
+    seeds = jnp.arange(4)
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    ys = jax.jit(jax.vmap(fwd))(seeds, keys)
+    assert ys.shape == (4,) + x.shape[:-1] + (w.shape[-1],)
+    flat = np.asarray(ys).reshape(4, -1)
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(flat[i], flat[j])
+    # reproducible end to end: the same vmapped call is bitwise stable
+    np.testing.assert_array_equal(np.asarray(ys),
+                                  np.asarray(jax.jit(jax.vmap(fwd))(seeds,
+                                                                    keys)))
+
+
+# ---------------------------------------------------------------------------
+# prepared (plan-baked) faults == dynamic faults
+# ---------------------------------------------------------------------------
+
+def test_prepared_plan_bakes_same_device_as_dynamic(rng):
+    """prepare_linear bakes the seeded fault mask at plan time; the
+    prepared path must sample the SAME device as the dynamic path —
+    bitwise (y and ad_ops), including the fixed-pattern ADC offsets."""
+    x, w = _mvm_inputs(rng)
+    cm = CrossbarModel(g_sigma=0.08, sa0=0.02, sa1=0.01, adc_offset=0.2,
+                       seed=11)
+    with use_crossbar_model(cm):
+        dyn = pim_mvm(x, w, TRQ, backend="noisy")
+        lp = prepare_linear(w, TRQ, backend="noisy", crossbar_model=cm)
+        assert lp.w_analog is not None and lp.adc_off is not None
+        prep = run_prepared(x, lp)
+    np.testing.assert_array_equal(np.asarray(dyn.y), np.asarray(prep.y))
+    assert float(dyn.ad_ops) == float(prep.ad_ops)
+    # a device-null model keeps the ideal int8 cell planes
+    lp0 = prepare_linear(w, TRQ, backend="noisy",
+                         crossbar_model=CrossbarModel(read_sigma=0.5))
+    assert lp0.w_analog is None and lp0.w_planes is not None
+
+
+def test_stacked_prepare_gives_each_depth_its_own_device(rng):
+    """A stacked (L, K, N) layer family bakes per-slice fault masks that
+    match slicing the family and preparing each depth alone."""
+    w3 = jnp.asarray(rng.normal(0, 1, (2, 128, 16)), jnp.float32)
+    cm = CrossbarModel(g_sigma=0.1, sa0=0.03, seed=5)
+    lp3 = prepare_linear(w3, None, backend="noisy", crossbar_model=cm)
+    assert lp3.w_analog.shape[0] == 2
+    for d in range(2):
+        lp1 = prepare_linear(w3[d], None, backend="noisy", crossbar_model=cm)
+        np.testing.assert_array_equal(np.asarray(lp3.w_analog[d]),
+                                      np.asarray(lp1.w_analog))
+    # distinct weights -> distinct salts -> independent devices
+    assert not np.array_equal(np.asarray(lp3.w_analog[0]),
+                              np.asarray(lp3.w_analog[1]))
+    assert int(jax.vmap(value_salt)(w3).shape[0]) == 2
+
+
+def test_full_model_planned_matches_dynamic_under_device_faults(rng):
+    """End-to-end: a Runtime with a programmed plan (faults baked) and a
+    plan-disabled Runtime (faults sampled per call) are bitwise identical
+    for a device-only model — the two sampling times see the same device."""
+    cfg = _tiny("llama3.2-3b", "noisy")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(KEY)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 6)), jnp.int32)
+    cm = CrossbarModel(g_sigma=0.05, sa0=0.02, seed=3)
+    rt_planned = runtime.compile(cfg, params, crossbar_model=cm)
+    rt_dynamic = runtime.compile(cfg, params, crossbar_model=cm, plan=False)
+    assert rt_planned.plan is not None and rt_dynamic.plan is None
+    (lp_, _), rp = rt_planned.prefill(toks, max_len=8)
+    (ld_, _), rd = rt_dynamic.prefill(toks, max_len=8)
+    np.testing.assert_array_equal(np.asarray(lp_), np.asarray(ld_))
+    assert float(rp.ad_ops) == float(rd.ad_ops)
+
+
+# ---------------------------------------------------------------------------
+# Runtime threading: fingerprints, overrides, guards
+# ---------------------------------------------------------------------------
+
+def test_runtime_stamps_and_validates_cm_token(rng):
+    cfg = _tiny("llama3.2-3b", "noisy")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(KEY)
+    cm = CrossbarModel(g_sigma=0.05, seed=7)
+    rt = runtime.compile(cfg, params, crossbar_model=cm)
+    assert rt.plan.cm_token == crossbar_token(cm) == cm.plan_token()
+    # call-side-only models never invalidate a plan
+    assert crossbar_token(CrossbarModel(read_sigma=0.5)) is None
+    assert crossbar_token(None) is None
+    # a plan baked for one device is rejected on another Runtime
+    with pytest.raises(ValueError, match="different CrossbarModel"):
+        runtime.compile(cfg, params, plan=rt.plan)
+    with pytest.raises(ValueError, match="different CrossbarModel"):
+        runtime.compile(cfg, params, plan=rt.plan,
+                        crossbar_model=cm.replace(seed=8))
+    # the matching model revalidates fine
+    rt2 = runtime.compile(cfg, params, plan=rt.plan, crossbar_model=cm)
+    assert rt2.plan.cm_token == rt.plan.cm_token
+
+
+def test_with_overrides_shares_or_reprepares_on_model_change(rng):
+    cfg = _tiny("llama3.2-3b", "noisy")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(KEY)
+    cm = CrossbarModel(sa0=0.02, seed=1)
+    rt = runtime.compile(cfg, params, crossbar_model=cm)
+
+    same = rt.with_overrides(donate=True)          # model untouched: share
+    assert same.plan is rt.plan or same.plan.cm_token == rt.plan.cm_token
+    rebuilt = rt.with_overrides(crossbar_model=cm.replace(seed=2))
+    assert rebuilt.plan.cm_token != rt.plan.cm_token
+    cleared = rt.with_overrides(crossbar_model=None)   # literal None
+    assert cleared.crossbar_model is None
+    assert cleared.plan.cm_token is None
+    # swapping to an ideal backend while a faulty model rides along: loud
+    with pytest.raises(ValueError, match="noise-aware"):
+        rt.with_overrides(backend="bit_exact")
+
+
+def test_compile_rejects_nonnull_model_on_ideal_backend(rng):
+    cfg = _tiny("llama3.2-3b", "bit_exact")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(KEY)
+    with pytest.raises(ValueError, match="noise-aware"):
+        runtime.compile(cfg, params, crossbar_model=CrossbarModel(sa0=0.1))
+    # a null model is fine anywhere (it is exactly the ideal device)
+    rt = runtime.compile(cfg, params, crossbar_model=CrossbarModel())
+    assert rt.plan is not None
+
+
+def test_compile_resolves_ambient_model_and_pytree_roundtrip(rng):
+    cfg = _tiny("llama3.2-3b", "noisy")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(KEY)
+    cm = CrossbarModel(g_sigma=0.05, seed=9)
+    with use_crossbar_model(cm):
+        rt = runtime.compile(cfg, params)
+    assert rt.crossbar_model is cm
+    assert active_crossbar_model() is None
+    leaves, treedef = jax.tree_util.tree_flatten(rt)
+    rt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rt2.crossbar_model is not None
+    assert rt2.plan.cm_token == rt.plan.cm_token
+
+
+def test_plan_token_refuses_traced_models():
+    with pytest.raises(ValueError, match="concrete CrossbarModel"):
+        jax.jit(lambda s: jnp.float32(
+            hash(CrossbarModel(g_sigma=s).plan_token())))(jnp.float32(0.1))
+
+
+# ---------------------------------------------------------------------------
+# eager backend validation (satellite: compile-time, not first-trace-time)
+# ---------------------------------------------------------------------------
+
+def test_compile_validates_backend_eagerly(rng):
+    cfg = _tiny("llama3.2-3b", "bit_exact")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(KEY)
+    with pytest.raises(KeyError, match="bit_exact"):   # lists registered
+        runtime.compile(cfg, params, backend="bit_exactt")
+    rt = runtime.compile(cfg, params)
+    with pytest.raises(KeyError, match="noisy"):
+        rt.with_overrides(backend="noissy")
+
+
+# ---------------------------------------------------------------------------
+# serving stays correct under a noisy Runtime
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_noisy_null_matches_bit_exact(rng):
+    """Per-request results (tokens AND metered ad_ops) through the
+    continuous-batching engine are unchanged when the Runtime carries the
+    noisy datapath with an ideal device."""
+    from repro.serve.engine import ServeEngine
+    cfg = _tiny("llama3.2-3b", "bit_exact")
+    init_fn, _, _ = build_model(cfg)
+    params = init_fn(KEY)
+    prompts = [rng.integers(0, cfg.vocab_size, 7) for _ in range(3)]
+
+    def drain(backend):
+        rt = runtime.compile(cfg, params, backend=backend,
+                             crossbar_model=CrossbarModel())
+        eng = ServeEngine(rt, max_batch=2, max_len=32)
+        rs = [eng.submit(p, max_new_tokens=3) for p in prompts]
+        eng.run()
+        return [(r.generated, float(np.sum(r.ad_ops))) for r in rs]
+
+    for (tok_ex, ops_ex), (tok_no, ops_no) in zip(drain("bit_exact"),
+                                                  drain("noisy")):
+        assert tok_ex == tok_no
+        assert ops_ex == ops_no
+
+
+# ---------------------------------------------------------------------------
+# bench smoke (slow lane): the sweep runs and its gates hold
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_noise_sweep_smoke_quick():
+    """benchmarks.noise_sweep --quick end-to-end: tiny arch, 4 seeds under
+    vmap; the zero-noise identity records must be exactly 1.0 and every
+    sweep point must carry finite divergence stats."""
+    import importlib
+    noise_sweep = importlib.import_module("benchmarks.noise_sweep")
+    records = noise_sweep.run(quick=True)
+    ident = records["noise.llama3_2_3b.zero_noise"]
+    assert ident["zero_noise_identity"] == 1.0
+    assert ident["traced_zero_identity"] == 1.0
+    sweep = [r for name, r in records.items()
+             if "read_sigma" in name or "saf" in name]
+    assert len(sweep) == 4                      # 2 sigma + 2 SAF points
+    for r in sweep:
+        assert np.isfinite(r["mean_div"]) and np.isfinite(r["worst_div"])
+        assert r["worst_div"] >= r["mean_div"] >= 0.0
+        assert 0.0 <= r["top1_agree"] <= 1.0
+        assert r["ad_ops_ratio"] > 0.0

@@ -99,6 +99,35 @@ def test_json_round_trip(tmp_path, rng):
             assert getattr(p, f) == getattr(p2, f)
 
 
+def test_corrupt_json_raises_value_error_naming_path(tmp_path):
+    """A truncated/corrupt register file fails as a ``ValueError`` that
+    names the offending path and points at recalibration — not as a raw
+    ``JSONDecodeError`` from inside the json module."""
+    import json
+    # local stream: don't advance the session ``rng`` mid-module (later
+    # modules' bitwise-parity inputs must match the pre-existing sequence)
+    _, qs = _calibrated_state(np.random.default_rng(20260808))
+    path = save_quant_state(str(tmp_path / "qs.json"), qs)
+    blob = open(path).read()
+
+    truncated = str(tmp_path / "truncated.json")
+    with open(truncated, "w") as f:
+        f.write(blob[: len(blob) // 2])          # torn mid-write copy
+    with pytest.raises(ValueError, match="truncated.json.*recalibrate") as ei:
+        load_quant_state(truncated)
+    assert isinstance(ei.value.__cause__, json.JSONDecodeError)
+
+    garbage = str(tmp_path / "garbage.json")
+    with open(garbage, "w") as f:
+        f.write("not json at all {{{")
+    with pytest.raises(ValueError, match="garbage.json"):
+        load_quant_state(garbage)
+
+    # a missing file is still a plain FileNotFoundError, not wrapped
+    with pytest.raises(FileNotFoundError):
+        load_quant_state(str(tmp_path / "nope.json"))
+
+
 def test_json_schema_is_versioned(tmp_path, rng):
     """Saved states stamp the schema version; pre-versioning files load as
     schema 1; a snapshot from a NEWER schema fails loudly instead of
